@@ -1,0 +1,41 @@
+"""Fig. 10(a): error-free end-to-end inference overhead per CNN model -
+unprotected forward vs the multischeme workflow (CoC-D detection always
+on). The paper reports <4-8%; our CPU/XLA numbers are the reproduction
+target for this claim."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DEFAULT_CONFIG
+from repro.models import cnn
+from .common import row, time_fn
+
+SCALE = 0.12
+IMG = 64
+BATCH = 8
+
+
+def run(models=("alexnet", "vgg19", "resnet18", "yolov2")):
+    print("# Fig10a: error-free overhead per model")
+    out = []
+    for name in models:
+        cfg = cnn.CNN_REGISTRY[name](SCALE)
+        cfg = cfg.__class__(**{**cfg.__dict__, "img": IMG})
+        params = cnn.init_cnn(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1),
+                              (BATCH, 3, IMG, IMG), jnp.float32)
+        pol = cnn.layer_policies(cfg, BATCH)
+        off = cfg.__class__(**{**cfg.__dict__, "abft": False})
+        f_plain = jax.jit(lambda p, x: cnn.forward_cnn(p, x, off)[0])
+        f_prot = jax.jit(lambda p, x: cnn.forward_cnn(p, x, cfg, pol)[0])
+        t0 = time_fn(f_plain, params, x)
+        t1 = time_fn(f_prot, params, x)
+        ovh = (t1 - t0) / t0 * 100
+        out.append(row(f"fig10a/{name}", t1 * 1e6,
+                       f"plain_us={t0*1e6:.0f};overhead_pct={ovh:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Fig. 15: parallel scalability of the protection overhead. A subprocess
+emulates 1/2/4/8 hosts (XLA host devices); each device runs batch-parallel
+protected inference with injected errors. The paper's claim: overhead does
+not grow with node count."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from .common import row
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
+    import sys, json, time
+    sys.path.insert(0, %r)
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.models import cnn
+    from repro.core import DEFAULT_CONFIG
+
+    n = jax.device_count()
+    cfg = cnn.alexnet(0.12)
+    cfg = cfg.__class__(**{**cfg.__dict__, "img": 64})
+    params = cnn.init_cnn(jax.random.PRNGKey(0), cfg)
+    mesh = jax.make_mesh((n,), ("data",))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8 * n, 3, 64, 64))
+    x = jax.device_put(x, NamedSharding(mesh, P("data")))
+    params = jax.device_put(params, NamedSharding(mesh, P()))
+
+    off = cfg.__class__(**{**cfg.__dict__, "abft": False})
+    with mesh:
+        f_plain = jax.jit(lambda p, x: cnn.forward_cnn(p, x, off)[0])
+        f_prot = jax.jit(lambda p, x: cnn.forward_cnn(p, x, cfg)[0])
+
+        def t(f):
+            f(params, x).block_until_ready()
+            ts = []
+            for _ in range(3):
+                t0 = time.perf_counter()
+                f(params, x).block_until_ready()
+                ts.append(time.perf_counter() - t0)
+            return sorted(ts)[1]
+
+        t0, t1 = t(f_plain), t(f_prot)
+    print(json.dumps({"devices": n, "plain_s": t0, "prot_s": t1,
+                      "overhead_pct": (t1 - t0) / t0 * 100}))
+""")
+
+
+def run(device_counts=(1, 2, 4)):
+    print("# Fig15: protection overhead vs (emulated) node count")
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = []
+    for n in device_counts:
+        script = _SCRIPT % (n, src)
+        r = subprocess.run([sys.executable, "-c", script],
+                           capture_output=True, text=True, timeout=1200)
+        if r.returncode != 0:
+            out.append(row(f"fig15/devices{n}", -1,
+                           f"FAILED:{r.stderr[-200:]}"))
+            continue
+        data = json.loads(r.stdout.strip().splitlines()[-1])
+        out.append(row(f"fig15/devices{n}", data["prot_s"] * 1e6,
+                       f"overhead_pct={data['overhead_pct']:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

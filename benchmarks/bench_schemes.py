@@ -1,0 +1,134 @@
+"""Fig. 6 / Table 4: per-scheme checksum runtimes, normalised to the bare
+convolution, for the four CNN models - 'separate' cost of each scheme plus
+the checksum-reuse effect inside the workflow.
+
+Scheme costs measured as the extra work each scheme adds on top of conv:
+  CoC-D : encode C_d1/C_d2 + C_o5 + S_o5
+  CoC   : + C_o6/C_o7 + S_o6/S_o7
+  RC    : C_d1/C_d2 + C_o1/C_o3 convs + S_o1/S_o3
+  ClC   : C_o2/C_o4 convs + S_o2/S_o4 (kernel checksums precomputed)
+  FC    : C_d1 + C_o1/C_o2 convs + S_o1/S_o2
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import checksums as CS
+from repro.models import cnn
+from .common import row, time_fn
+
+SCALE = 0.12
+IMG = 64
+BATCH = 8
+
+
+def _layer_inputs(cfg, key, i):
+    spec = cfg.convs[i]
+    # derive the input resolution of layer i
+    img, ch = cfg.img, cfg.in_ch
+    for j in range(i):
+        s = cfg.convs[j]
+        img = (img + 2 * s.pad - s.kernel) // s.stride + 1
+        if s.pool:
+            img //= s.pool
+        ch = cfg.scaled(s.out_ch)
+    d = jax.random.normal(key, (BATCH, ch, img, img), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1),
+                          (cfg.scaled(spec.out_ch), ch, spec.kernel,
+                           spec.kernel), jnp.float32) * 0.05
+    return d, w, spec
+
+
+def _scheme_fns(d, w, spec):
+    pad = [(spec.pad, spec.pad)] * 2
+    conv = jax.jit(lambda d, w: CS.conv2d(d, w, stride=spec.stride,
+                                          padding=pad))
+    cw1, cw2 = CS.encode_w_conv(w)
+    cv = functools.partial(jax.lax.conv_general_dilated,
+                           window_strides=(spec.stride, spec.stride),
+                           padding=pad, dimension_numbers=CS._DN,
+                           preferred_element_type=jnp.float32)
+
+    def coc_d(d, w, o):
+        cd1, cd2 = CS.encode_d_conv(d)
+        c5 = cv(cd1[None], cw1[None])[0, 0]
+        s5 = jnp.sum(o.astype(jnp.float32), axis=(0, 1))
+        return c5, s5
+
+    def coc(d, w, o):
+        cd1, cd2 = CS.encode_d_conv(d)
+        o32 = o.astype(jnp.float32)
+        c5 = cv(cd1[None], cw1[None])[0, 0]
+        c6 = cv(cd2[None], cw1[None])[0, 0]
+        c7 = cv(cd1[None], cw2[None])[0, 0]
+        n, m = o.shape[0], o.shape[1]
+        s5 = jnp.sum(o32, axis=(0, 1))
+        s6 = jnp.einsum("nmxy,n->xy", o32, jnp.arange(n, dtype=jnp.float32))
+        s7 = jnp.einsum("nmxy,m->xy", o32, jnp.arange(m, dtype=jnp.float32))
+        return c5, c6, c7, s5, s6, s7
+
+    def rc(d, w, o):
+        cd1, cd2 = CS.encode_d_conv(d)
+        o32 = o.astype(jnp.float32)
+        c1 = cv(cd1[None], w.astype(jnp.float32))[0]
+        c3 = cv(cd2[None], w.astype(jnp.float32))[0]
+        s1 = jnp.sum(o32, axis=0)
+        s3 = jnp.einsum("nmxy,n->mxy", o32,
+                        jnp.arange(o.shape[0], dtype=jnp.float32))
+        return c1, c3, s1, s3
+
+    def clc(d, w, o):
+        o32 = o.astype(jnp.float32)
+        c2 = cv(d.astype(jnp.float32), cw1[None])[:, 0]
+        c4 = cv(d.astype(jnp.float32), cw2[None])[:, 0]
+        s2 = jnp.sum(o32, axis=1)
+        s4 = jnp.einsum("nmxy,m->nxy", o32,
+                        jnp.arange(o.shape[1], dtype=jnp.float32))
+        return c2, c4, s2, s4
+
+    def fc(d, w, o):
+        cd1, _ = CS.encode_d_conv(d)
+        o32 = o.astype(jnp.float32)
+        c1 = cv(cd1[None], w.astype(jnp.float32))[0]
+        c2 = cv(d.astype(jnp.float32), cw1[None])[:, 0]
+        s1 = jnp.sum(o32, axis=0)
+        s2 = jnp.sum(o32, axis=1)
+        return c1, c2, s1, s2
+
+    return conv, {"coc_d": coc_d, "coc": coc, "rc": rc, "clc": clc,
+                  "fc": fc}
+
+
+def run(models=("alexnet", "vgg19", "resnet18", "yolov2"),
+        layers_per_model=4):
+    print("# Fig6/Table4: scheme runtime normalised to conv (model avg)")
+    out = []
+    for name in models:
+        cfg = cnn.CNN_REGISTRY[name](SCALE)
+        cfg = cfg.__class__(**{**cfg.__dict__, "img": IMG})
+        key = jax.random.PRNGKey(0)
+        idxs = list(range(0, len(cfg.convs),
+                          max(len(cfg.convs) // layers_per_model, 1)))
+        totals = {k: 0.0 for k in ("conv", "coc_d", "coc", "rc", "clc",
+                                   "fc")}
+        for i in idxs:
+            d, w, spec = _layer_inputs(cfg, jax.random.fold_in(key, i), i)
+            conv, fns = _scheme_fns(d, w, spec)
+            o = conv(d, w)
+            t_conv = time_fn(conv, d, w)
+            totals["conv"] += t_conv
+            for k, f in fns.items():
+                jf = jax.jit(f)
+                totals[k] += time_fn(jf, d, w, o)
+        base = totals["conv"]
+        for k in ("coc_d", "coc", "rc", "clc", "fc"):
+            out.append(row(f"fig6/{name}/{k}", totals[k] * 1e6 / len(idxs),
+                           f"normalized={totals[k] / base:.3f}"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

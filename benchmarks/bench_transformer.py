@@ -1,0 +1,40 @@
+"""Beyond-paper: ABFT overhead on transformer steps (the assigned-arch
+regime). Protected vs unprotected train and decode steps on reduced
+configs - the LLM-scale analogue of Fig. 10(a)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.launch.steps import init_train_state, make_train_step
+from repro.models import transformer as M
+from repro.optim import OptConfig
+from .common import row, time_fn
+
+
+def run(archs=("smollm-360m", "yi-9b", "mamba2-1.3b")):
+    print("# transformer: ABFT overhead on train/decode steps (reduced)")
+    out = []
+    for arch in archs:
+        cfg = C.reduced(C.get(arch)).replace(remat=False)
+        key = jax.random.PRNGKey(0)
+        opt = OptConfig()
+        batch = {"tokens": jax.random.randint(key, (4, 64), 0,
+                                              cfg.vocab_size),
+                 "labels": jax.random.randint(key, (4, 64), 0,
+                                              cfg.vocab_size)}
+        times = {}
+        for abft in (False, True):
+            c = cfg.replace(abft=abft)
+            state = init_train_state(key, c, opt)
+            step = jax.jit(make_train_step(c, opt))
+            times[abft] = time_fn(step, state, batch, warmup=1, iters=3)
+        ovh = (times[True] - times[False]) / times[False] * 100
+        out.append(row(f"transformer/train/{arch}", times[True] * 1e6,
+                       f"overhead_pct={ovh:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Benchmark helpers: robust timing of jitted callables on CPU."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+            **kwargs) -> float:
+    """Median wall seconds per call of an already-jitted fn."""
+    for _ in range(warmup):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line, flush=True)
+    return line

@@ -1,0 +1,54 @@
+"""End-to-end driver example: train a language model with full ABFT
+protection, fault-tolerant stepping, async checkpoints and restart.
+
+Default is a fast CPU-sized run; `--full` trains the ~100M-param config
+(smollm-360m at half width) for a few hundred steps - the deliverable-(b)
+configuration, sized for a real accelerator.
+
+    PYTHONPATH=src python examples/train_lm.py                 # ~2 min CPU
+    PYTHONPATH=src python examples/train_lm.py --full          # ~100M model
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import train  # noqa: E402
+import logging  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params x 300 steps (accelerator-sized)")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/ftjax_train_lm")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(message)s")
+
+    if args.full:
+        # smollm-360m config narrowed to ~100M params, full seq pipeline
+        import repro.configs as C
+        from repro.configs.archs import ARCH_BUILDERS
+        base = C.get("smollm-360m")
+        cfg = base.replace(name="smollm-100m", num_layers=12, d_model=768,
+                           num_heads=12, num_kv_heads=4, head_dim=64,
+                           d_ff=2048)
+        ARCH_BUILDERS["smollm-100m"] = lambda: cfg
+        state, hist, stats = train("smollm-100m", steps=args.steps or 300,
+                                   batch=32, seq=1024,
+                                   ckpt_dir=args.ckpt_dir, ckpt_every=50,
+                                   microbatches=4)
+    else:
+        state, hist, stats = train("smollm-360m-smoke",
+                                   steps=args.steps or 30, batch=8, seq=64,
+                                   ckpt_dir=args.ckpt_dir, ckpt_every=10,
+                                   microbatches=2,
+                                   inject_fault_at=5)
+    print(f"loss: {hist[0]:.4f} -> {hist[-1]:.4f}  ft-stats: {stats}")
+    assert hist[-1] < hist[0], "loss should decrease"
+
+
+if __name__ == "__main__":
+    main()

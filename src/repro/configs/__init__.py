@@ -1,0 +1,22 @@
+"""Config registry: the 10 assigned architectures (--arch <id>), the four
+paper CNNs, and the assigned input-shape specs."""
+from .archs import ARCH_BUILDERS, LONG_CONTEXT_OK, reduced
+from .base import ModelConfig
+from .shapes import SHAPES, ShapeSpec, cell_supported, input_specs
+
+
+def get(name: str) -> ModelConfig:
+    if name.endswith("-smoke"):
+        return reduced(get(name[: -len("-smoke")]))
+    if name not in ARCH_BUILDERS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCH_BUILDERS)}")
+    return ARCH_BUILDERS[name]()
+
+
+def list_archs():
+    return sorted(ARCH_BUILDERS)
+
+
+__all__ = ["ARCH_BUILDERS", "LONG_CONTEXT_OK", "ModelConfig", "SHAPES",
+           "ShapeSpec", "cell_supported", "get", "input_specs",
+           "list_archs", "reduced"]

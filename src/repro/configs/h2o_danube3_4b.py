@@ -1,0 +1,3 @@
+"""Arch config module (assignment deliverable f): re-exports the builder."""
+from .archs import h2o_danube3_4b as build
+CONFIG = build()

@@ -1,0 +1,3 @@
+"""Arch config module (assignment deliverable f): re-exports the builder."""
+from .archs import kimi_k2 as build
+CONFIG = build()

@@ -1,0 +1,3 @@
+"""Arch config module (assignment deliverable f): re-exports the builder."""
+from .archs import musicgen_large as build
+CONFIG = build()

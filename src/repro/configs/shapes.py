@@ -1,0 +1,77 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+Every (arch x shape) cell lowers one of:
+  train_4k    -> train_step   (seq 4096,  global batch 256)
+  prefill_32k -> prefill_step (seq 32768, global batch 32)
+  decode_32k  -> serve_step   (1 new token, KV len 32768, batch 128)
+  long_500k   -> serve_step   (1 new token, KV len 524288, batch 1);
+                 only for sub-quadratic archs (configs.archs.LONG_CONTEXT_OK)
+
+input_specs() returns weak-type-correct ShapeDtypeStructs - no allocation;
+cache specs come from jax.eval_shape over the real cache initialiser.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .archs import LONG_CONTEXT_OK
+from .base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str        # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and cfg.name.replace("-smoke", "") not in LONG_CONTEXT_OK:
+        return False, ("pure full-attention arch: 500k decode has no "
+                       "sub-quadratic path (DESIGN.md SSlong_500k)")
+    return True, ""
+
+
+def _tok_shape(cfg: ModelConfig, batch: int, seq: int) -> Tuple[int, ...]:
+    if cfg.num_codebooks:
+        return (batch, seq, cfg.num_codebooks)
+    return (batch, seq)
+
+
+def input_specs(cfg: ModelConfig, shape: str,
+                batch_override: int = 0) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step function of this cell."""
+    spec = SHAPES[shape]
+    b = batch_override or spec.global_batch
+    s = spec.seq_len
+    i32 = jnp.int32
+    if spec.kind == "train":
+        return {
+            "tokens": jax.ShapeDtypeStruct(_tok_shape(cfg, b, s), i32),
+            "labels": jax.ShapeDtypeStruct(_tok_shape(cfg, b, s), i32),
+        }
+    if spec.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct(_tok_shape(cfg, b, s), i32)}
+    # decode: one new token against a cache of seq_len (synchronized batch
+    # decode: scalar step position)
+    from repro.models.transformer import init_caches
+    caches = jax.eval_shape(functools.partial(init_caches, cfg, b, s))
+    return {
+        "tokens": jax.ShapeDtypeStruct(_tok_shape(cfg, b, 1), i32),
+        "positions": jax.ShapeDtypeStruct((), i32),
+        "caches": caches,
+    }

@@ -1,0 +1,3 @@
+"""Arch config module (assignment deliverable f): re-exports the builder."""
+from .archs import yi_9b as build
+CONFIG = build()

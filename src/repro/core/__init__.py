@@ -1,0 +1,19 @@
+"""ABFT core: the paper's contribution (checksum schemes + multischeme
+workflow) for convolution and its exact block-level generalisation to
+matmul."""
+from . import checksums, injection, policy, schemes, thresholds
+from .protected import (WeightChecksums, abft_matmul_vjp, pick_chunk,
+                        protect_matmul_output, protected_conv,
+                        protected_grouped_matmul, protected_matmul,
+                        weight_checksums_matmul)
+from .types import (CHECKSUM_REFRESH, CLC, COC, DEFAULT_CONFIG, FC, NONE, RC,
+                    RECOMPUTE, SCHEME_NAMES, FaultReport, ProtectConfig)
+
+__all__ = [
+    "checksums", "injection", "policy", "schemes", "thresholds",
+    "WeightChecksums", "abft_matmul_vjp", "pick_chunk",
+    "protect_matmul_output", "protected_conv", "protected_grouped_matmul",
+    "protected_matmul", "weight_checksums_matmul",
+    "CHECKSUM_REFRESH", "CLC", "COC", "DEFAULT_CONFIG", "FC", "NONE", "RC",
+    "RECOMPUTE", "SCHEME_NAMES", "FaultReport", "ProtectConfig",
+]

@@ -1,0 +1,214 @@
+"""Input/output checksum encodings (paper Eq. 5/6), for matmul and conv.
+
+Matmul block view: O[N,M] = D[N,K] @ W[K,M]. Rows of D are the fmap blocks,
+columns of W are the kernel blocks, and (x) degenerates to a dot product -
+every identity of the paper holds verbatim with per-block payload P=1.
+
+Conv view (paper's native form): D[N,Ch,H,H], W[M,Ch,R,R], O[N,M,E,E];
+blocks are the 3D substructures and the payload is the E*E output map.
+
+All checksums are carried in fp32 regardless of the operand dtype.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import OutputChecksums, OutputSums
+
+F32 = jnp.float32
+
+
+def _iota(n: int) -> jnp.ndarray:
+    return jnp.arange(n, dtype=F32)
+
+
+# --------------------------------------------------------------------------
+# matmul path
+# --------------------------------------------------------------------------
+
+def encode_d_matmul(d: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """C_d1, C_d2 of D[N,K] (fp32). One pass over D; XLA fuses both sums."""
+    d32 = d.astype(F32)
+    cd1 = jnp.sum(d32, axis=0)
+    cd2 = _iota(d.shape[0]) @ d32
+    return cd1, cd2
+
+
+def encode_w_matmul(w: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """C_w1, C_w2 of W[K,M] (fp32). Precomputable for weight-stationary ops."""
+    w32 = w.astype(F32)
+    cw1 = jnp.sum(w32, axis=1)
+    cw2 = w32 @ _iota(w.shape[1])
+    return cw1, cw2
+
+
+def output_sums_matmul(o: jnp.ndarray) -> OutputSums:
+    """All seven summations + sumsq of O[N,M] in fp32 (single logical pass;
+    XLA fuses the reductions). Payload axis P=1 is appended."""
+    n, m = o.shape
+    o32 = o.astype(F32)
+    wn = _iota(n)
+    wm = _iota(m)
+    s1 = jnp.sum(o32, axis=0)          # (M,)
+    s2 = jnp.sum(o32, axis=1)          # (N,)
+    s3 = wn @ o32                      # (M,)
+    s4 = o32 @ wm                      # (N,)
+    s5 = jnp.sum(s1)
+    s6 = jnp.dot(wn, s2)               # sum_n n * rowsum
+    s7 = jnp.dot(s1, wm)
+    sumsq = jnp.sum(o32 * o32)
+    return OutputSums(s1[:, None], s2[:, None], s3[:, None], s4[:, None],
+                      s5[None], s6[None], s7[None], sumsq)
+
+
+def output_checksums_matmul(
+    d: jnp.ndarray, w: jnp.ndarray,
+    cd1: jnp.ndarray, cd2: jnp.ndarray,
+    cw1: jnp.ndarray, cw2: jnp.ndarray,
+    need_rowcol: bool = True,
+) -> OutputChecksums:
+    """C_o1..C_o7. The scalar triple is O(K); c1..c4 are single GEMVs."""
+    c5 = jnp.dot(cd1, cw1)[None]
+    c6 = jnp.dot(cd2, cw1)[None]
+    c7 = jnp.dot(cd1, cw2)[None]
+    if need_rowcol:
+        w32 = w.astype(F32)
+        d32 = d.astype(F32)
+        c1 = (cd1 @ w32)[:, None]
+        c2 = (d32 @ cw1)[:, None]
+        c3 = (cd2 @ w32)[:, None]
+        c4 = (d32 @ cw2)[:, None]
+    else:
+        c1 = c2 = c3 = c4 = None
+    return OutputChecksums(c1, c2, c3, c4, c5, c6, c7)
+
+
+def absdot_matmul(cd1: jnp.ndarray, cw1: jnp.ndarray) -> jnp.ndarray:
+    """|C_d1| . |C_w1| - checksum-side magnitude for the threshold model."""
+    return jnp.dot(jnp.abs(cd1), jnp.abs(cw1))
+
+
+# --------------------------------------------------------------------------
+# conv path (NCHW). dn = lax.conv dimension numbers for NCHW/OIHW.
+# --------------------------------------------------------------------------
+
+_DN = ("NCHW", "OIHW", "NCHW")
+
+
+def conv2d(d: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+           padding="VALID", groups: int = 1) -> jnp.ndarray:
+    """The unprotected convolution (paper Eq. 1 without bias). XLA is free
+    to choose its implementation - the checksums sit above it."""
+    return jax.lax.conv_general_dilated(
+        d, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=_DN, feature_group_count=groups,
+        preferred_element_type=F32).astype(d.dtype)
+
+
+def encode_d_conv(d: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """C_d1, C_d2 over the batch axis of D[N,Ch,H,W]."""
+    d32 = d.astype(F32)
+    cd1 = jnp.sum(d32, axis=0)
+    cd2 = jnp.tensordot(_iota(d.shape[0]), d32, axes=1)
+    return cd1, cd2
+
+
+def encode_w_conv(w: jnp.ndarray, groups: int = 1
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """C_w1, C_w2 over the output-channel axis of W[M,Ch,R,R].
+
+    For grouped convolution (paper SS5.2) the checksums are computed per
+    group and concatenated along the channel axis so the result convolves
+    with the full-channel fmap blocks.
+    """
+    w32 = w.astype(F32)
+    m = w.shape[0]
+    if groups == 1:
+        cw1 = jnp.sum(w32, axis=0)
+        cw2 = jnp.tensordot(_iota(m), w32, axes=1)
+        return cw1, cw2
+    mg = m // groups
+    wg = w32.reshape(groups, mg, *w32.shape[1:])       # (G, M/G, Ch/G, R, R)
+    weights = _iota(m).reshape(groups, mg)
+    cw1 = jnp.concatenate(list(jnp.sum(wg, axis=1)), axis=0)   # (Ch, R, R)
+    cw2 = jnp.concatenate(
+        list(jnp.einsum("gm,gmchw->gchw", weights, wg)), axis=0)
+    return cw1, cw2
+
+
+def output_sums_conv(o: jnp.ndarray) -> OutputSums:
+    """Summations of O[N,M,E,E], payload-flattened to (., P=E*E)."""
+    n, m, e1, e2 = o.shape
+    p = e1 * e2
+    o32 = o.astype(F32).reshape(n, m, p)
+    wn = _iota(n)
+    wm = _iota(m)
+    s1 = jnp.sum(o32, axis=0)                       # (M, P)
+    s2 = jnp.sum(o32, axis=1)                       # (N, P)
+    s3 = jnp.tensordot(wn, o32, axes=1)             # (M, P)
+    s4 = jnp.einsum("nmp,m->np", o32, wm)           # (N, P)
+    s5 = jnp.sum(s1, axis=0)                        # (P,)
+    s6 = jnp.tensordot(wn, s2, axes=1)              # (P,)
+    s7 = jnp.tensordot(wm, s1, axes=1)              # (P,)
+    sumsq = jnp.sum(o32 * o32)
+    return OutputSums(s1, s2, s3, s4, s5, s6, s7, sumsq)
+
+
+def output_checksums_conv(
+    d: jnp.ndarray, w: jnp.ndarray,
+    cd1: jnp.ndarray, cd2: jnp.ndarray,
+    cw1: jnp.ndarray, cw2: jnp.ndarray,
+    stride: int = 1, padding="VALID", groups: int = 1,
+    need_rowcol: bool = True,
+) -> OutputChecksums:
+    """C_o1..C_o7 via tiny convolutions of the checksum blocks.
+
+    c1/c3 cost one batch-1 conv each; c2/c4 one single-output-channel conv;
+    c5/c6/c7 are 1x1-block convs - all negligible next to the NM-block op.
+    Grouped conv (paper SS5.2): cw1/cw2 already have full Ch channels, so the
+    checksum convs run as *dense* convs (groups=1) - this is exactly the
+    identity proved in the paper.
+    """
+    cv = partial(jax.lax.conv_general_dilated, window_strides=(stride, stride),
+                 padding=padding, dimension_numbers=_DN,
+                 preferred_element_type=F32)
+    d32 = d.astype(F32)
+    w32 = w.astype(F32)
+
+    c5 = cv(cd1[None], cw1[None])[0, 0].reshape(-1)
+    c6 = cv(cd2[None], cw1[None])[0, 0].reshape(-1)
+    c7 = cv(cd1[None], cw2[None])[0, 0].reshape(-1)
+    if need_rowcol:
+        if groups == 1:
+            c1 = cv(cd1[None], w32)[0]                      # (M, E, E)
+            c3 = cv(cd2[None], w32)[0]
+        else:
+            c1 = jax.lax.conv_general_dilated(
+                cd1[None], w32, (stride, stride), padding,
+                dimension_numbers=_DN, feature_group_count=groups,
+                preferred_element_type=F32)[0]
+            c3 = jax.lax.conv_general_dilated(
+                cd2[None], w32, (stride, stride), padding,
+                dimension_numbers=_DN, feature_group_count=groups,
+                preferred_element_type=F32)[0]
+        c2 = cv(d32, cw1[None])[:, 0]                       # (N, E, E)
+        c4 = cv(d32, cw2[None])[:, 0]
+        c1, c2, c3, c4 = (x.reshape(x.shape[0], -1) for x in (c1, c2, c3, c4))
+    else:
+        c1 = c2 = c3 = c4 = None
+    return OutputChecksums(c1, c2, c3, c4, c5, c6, c7)
+
+
+def absdot_conv(cd1: jnp.ndarray, cw1: jnp.ndarray, stride: int = 1,
+                padding="VALID") -> jnp.ndarray:
+    """Checksum-magnitude scale for conv: |cd1| (x) |cw1| summed, one value
+    per op (coarse upper bound is fine - it only guards the fp32 term).
+    Uses the op's own stride/padding so the output is never empty."""
+    c = jax.lax.conv_general_dilated(
+        jnp.abs(cd1)[None], jnp.abs(cw1)[None], (stride, stride), padding,
+        dimension_numbers=_DN, preferred_element_type=F32)
+    return jnp.max(c)

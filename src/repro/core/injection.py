@@ -1,0 +1,98 @@
+"""Fault injection (paper SS6.1 'Error injection').
+
+The paper injects at source level: "randomly corrupt up to 100 elements in
+one randomly selected row or column of inputs and output". We reproduce
+that, deterministically from a PRNG key, for both the matmul block view
+(rows/columns of O[N,M]) and the conv block view (block-rows/-columns of
+O[N,M,E,E]).
+
+Magnitudes emulate high-order bit flips: the corrupted value is scaled by a
+large factor (sign+exponent corruption), the regime ABFT targets - flips
+below the arithmetic's own rounding noise are neither detectable nor
+material (see thresholds.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class InjectionPlan(NamedTuple):
+    axis: jnp.ndarray       # 0 = corrupt a row, 1 = corrupt a column
+    index: jnp.ndarray      # which row/column
+    nelem: jnp.ndarray      # how many elements within it
+    scale: jnp.ndarray      # multiplicative corruption factor
+    offsets: jnp.ndarray    # element positions within the row/column
+
+
+def plan(key: jax.Array, n: int, m: int, max_elems: int = 100,
+         axis: Optional[int] = None) -> InjectionPlan:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    ax = (jax.random.bernoulli(k1).astype(jnp.int32)
+          if axis is None else jnp.int32(axis))
+    limit = jnp.where(ax == 0, m, n)     # row corruption spans columns
+    idx = jax.random.randint(k2, (), 0, jnp.where(ax == 0, n, m))
+    span = int(min(max_elems, max(n, m)))
+    nelem = jax.random.randint(k3, (), 1, span + 1)
+    # exponent-style corruption: multiply by 2^e, e in [4, 12]
+    e = jax.random.randint(k4, (), 4, 13).astype(jnp.float32)
+    scale = jnp.where(jax.random.bernoulli(k5), 1.0, -1.0) * 2.0 ** e
+    offsets = jax.random.permutation(k5, jnp.arange(max(n, m)))[:span]
+    return InjectionPlan(ax, idx, nelem, scale, offsets)
+
+
+def inject_matmul(o: jnp.ndarray, p: InjectionPlan) -> jnp.ndarray:
+    """Corrupt O[N,M] according to the plan (row- or column-confined)."""
+    n, m = o.shape
+    rows = jnp.arange(n)[:, None]
+    cols = jnp.arange(m)[None, :]
+    k = jnp.minimum(p.nelem, jnp.where(p.axis == 0, m, n))
+    sel = jnp.zeros(max(n, m), bool).at[p.offsets].set(
+        jnp.arange(p.offsets.shape[0]) < k)
+    in_row = (rows == p.index) & sel[:m][cols]
+    in_col = (cols == p.index) & sel[:n][rows]
+    mask = jnp.where(p.axis == 0, in_row, in_col)
+    corrupted = o * p.scale.astype(o.dtype) + jnp.asarray(1.0, o.dtype)
+    return jnp.where(mask, corrupted, o)
+
+
+def inject_conv(o: jnp.ndarray, p: InjectionPlan) -> jnp.ndarray:
+    """Corrupt one block-row or block-column of O[N,M,E,E]: up to nelem
+    elements spread across the blocks of that row/column."""
+    n, m, e1, e2 = o.shape
+    o3 = o.reshape(n, m, e1 * e2)
+    pe = e1 * e2
+    # corrupt up to nelem distinct payload elements of every block in the
+    # chosen block-row (axis=0) / block-column (axis=1): one corrupted
+    # row/column with multiple soft errors, exactly the paper's model.
+    # (a permutation of the payload indices guarantees >=1 hit - moduloed
+    # duplicate indices could otherwise cancel to an empty injection)
+    perm = jax.random.permutation(
+        jax.random.fold_in(jax.random.PRNGKey(0), p.index),
+        jnp.arange(pe))
+    pay = jnp.zeros(pe, bool).at[perm].set(
+        jnp.arange(pe) < jnp.maximum(jnp.minimum(p.nelem, pe), 1))
+    blocks_n = jnp.arange(n)[:, None, None]
+    blocks_m = jnp.arange(m)[None, :, None]
+    row_mask = (blocks_n == p.index) & pay[None, None, :]
+    col_mask = (blocks_m == p.index) & pay[None, None, :]
+    mask = jnp.where(p.axis == 0, row_mask, col_mask)
+    corrupted = o3 * p.scale.astype(o.dtype) + jnp.asarray(1.0, o.dtype)
+    return jnp.where(mask, corrupted, o3).reshape(o.shape)
+
+
+def inject_single_block(o: jnp.ndarray, key: jax.Array,
+                        scale: float = 512.0) -> jnp.ndarray:
+    """Corrupt a handful of elements of one block O[i][j] (CoC's regime)."""
+    if o.ndim == 2:
+        n, m = o.shape
+        i = jax.random.randint(key, (), 0, n)
+        j = jax.random.randint(jax.random.fold_in(key, 1), (), 0, m)
+        return o.at[i, j].multiply(scale).at[i, j].add(1.0)
+    n, m = o.shape[:2]
+    i = jax.random.randint(key, (), 0, n)
+    j = jax.random.randint(jax.random.fold_in(key, 1), (), 0, m)
+    upd = o[i, j] * scale + 1.0
+    return o.at[i, j].set(upd.astype(o.dtype))

@@ -1,0 +1,549 @@
+"""Protected matmul / conv: the paper's ABFT wrapped around any
+implementation of the underlying linear op.
+
+Matmul protection is *chunked*: O[N,M] is tiled into (row_chunk x col_chunk)
+regions, each carrying independent checksums (vmapped schemes). Chunking
+bounds the index-weight magnitude (locator precision in low precision) and
+lets disjoint chunks recover independent faults - the block-level
+independence argument of the paper, lifted one level.
+
+The error-free cost is: one pass over D (C_d1/C_d2 encode), the chunked
+output summations (one pass over O, or free via the fused Pallas epilogue),
+and the O(K)-sized checksum dots. This is the CoC-D detection stage of the
+multischeme workflow; everything else lives behind a lax.cond.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import checksums as C
+from . import schemes as S
+from . import thresholds as TH
+from . import types as T
+from .workflow import run_ladder
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+def pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (n itself if n <= target)."""
+    if n <= target:
+        return max(n, 1)
+    best = 1
+    for d in range(1, int(math.isqrt(n)) + 1):
+        if n % d == 0:
+            if d <= target:
+                best = max(best, d)
+            q = n // d
+            if q <= target:
+                best = max(best, q)
+    return best
+
+
+class WeightChecksums(NamedTuple):
+    """Chunked kernel checksums of W[K,M] (precomputable; paper: 'kernel
+    checksums can be precalculated before the application')."""
+    cw1: jnp.ndarray  # (mb, K)  per-chunk sum over columns
+    cw2: jnp.ndarray  # (mb, K)  per-chunk locally-index-weighted sum
+    col_chunk: int
+
+
+def weight_checksums_matmul(w: jnp.ndarray, col_chunk: int) -> WeightChecksums:
+    k, m = w.shape
+    cb = pick_chunk(m, col_chunk)
+    mb = m // cb
+    w32 = w.astype(F32).reshape(k, mb, cb)
+    cw1 = jnp.einsum("kbc->bk", w32)
+    cw2 = jnp.einsum("kbc,c->bk", w32, jnp.arange(cb, dtype=F32))
+    return WeightChecksums(cw1, cw2, cb)
+
+
+class _ChunkedChecksums(NamedTuple):
+    """Scalar (CoC) invariants per chunk-pair + encodes needed by rungs."""
+    cd1: jnp.ndarray      # (nb, K)
+    cd2: jnp.ndarray      # (nb, K)
+    cw1: jnp.ndarray      # (mb, K)
+    cw2: jnp.ndarray      # (mb, K)
+    c5: jnp.ndarray       # (nb, mb)
+    c6: jnp.ndarray       # (nb, mb)  n-weighted (local indices)
+    c7: jnp.ndarray       # (nb, mb)  m-weighted (local indices)
+    absdot: jnp.ndarray   # (nb, mb)  |cd1|.|cw1| threshold scale
+
+
+def _encode_d_chunked(d2: jnp.ndarray, rb: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    n, k = d2.shape
+    nb = n // rb
+    d32 = d2.astype(F32).reshape(nb, rb, k)
+    cd1 = jnp.sum(d32, axis=1)
+    cd2 = jnp.einsum("brk,r->bk", d32, jnp.arange(rb, dtype=F32))
+    return cd1, cd2
+
+
+def _scalar_checksums(cd1, cd2, wck: WeightChecksums) -> _ChunkedChecksums:
+    c5 = cd1 @ wck.cw1.T
+    c6 = cd2 @ wck.cw1.T
+    c7 = cd1 @ wck.cw2.T
+    absdot = jnp.abs(cd1) @ jnp.abs(wck.cw1).T
+    return _ChunkedChecksums(cd1, cd2, wck.cw1, wck.cw2, c5, c6, c7, absdot)
+
+
+def _chunk_sums(o: jnp.ndarray, rb: int, cb: int):
+    """Per-chunk s5/s6/s7/sumsq of O[N,M] (one fused pass under XLA)."""
+    n, m = o.shape
+    nb, mb = n // rb, m // cb
+    o4 = o.astype(F32).reshape(nb, rb, mb, cb)
+    s5 = jnp.einsum("arbc->ab", o4)
+    s6 = jnp.einsum("arbc,r->ab", o4, jnp.arange(rb, dtype=F32))
+    s7 = jnp.einsum("arbc,c->ab", o4, jnp.arange(cb, dtype=F32))
+    sumsq = jnp.einsum("arbc,arbc->ab", o4, o4)
+    return s5, s6, s7, sumsq
+
+
+class BiasAdjust(NamedTuple):
+    """Checksum-side bias adjustments (paper Table 5, applied to C instead
+    of S - algebraically identical, avoids touching the hot summations)."""
+    b_chunk_sum: jnp.ndarray   # (mb,)   sum_c b per column chunk
+    b_chunk_wsum: jnp.ndarray  # (mb,)   sum_c c*b per column chunk
+    b_chunks: jnp.ndarray      # (mb, cb)
+
+
+def _bias_adjust(bias: jnp.ndarray, cb: int) -> BiasAdjust:
+    mb = bias.shape[0] // cb
+    b = bias.astype(F32).reshape(mb, cb)
+    return BiasAdjust(jnp.sum(b, axis=1),
+                      b @ jnp.arange(cb, dtype=F32), b)
+
+
+# --------------------------------------------------------------------------
+# the protected matmul
+# --------------------------------------------------------------------------
+
+def protect_matmul_output(
+    d2: jnp.ndarray,
+    w: jnp.ndarray,
+    o: jnp.ndarray,
+    wck: Optional[WeightChecksums] = None,
+    bias: Optional[jnp.ndarray] = None,
+    cfg: T.ProtectConfig = T.DEFAULT_CONFIG,
+    recompute_fn: Optional[Callable[[], jnp.ndarray]] = None,
+    tamper_checksums: Optional[Callable] = None,
+    precomputed_sums=None,
+) -> Tuple[jnp.ndarray, T.FaultReport]:
+    """Run the multischeme workflow on an already-computed O = D @ W (+bias).
+
+    `o` may have been produced by *any* implementation (XLA dot, the fused
+    Pallas kernel, ...). `tamper_checksums` is a test hook that corrupts the
+    checksum set after encoding (paper Fig. 3/5 scenarios).
+    `precomputed_sums` threads the fused kernel's epilogue partials
+    (s5, s6, s7, sumsq per chunk) so detection costs no extra pass over O.
+    """
+    n, k = d2.shape
+    m = w.shape[1]
+    rb = pick_chunk(n, cfg.row_chunk)
+    cb = wck.col_chunk if wck is not None else pick_chunk(m, cfg.col_chunk)
+    nb, mb = n // rb, m // cb
+
+    if wck is None:
+        wck = weight_checksums_matmul(w, cb)
+    if recompute_fn is None:
+        def recompute_fn():
+            fresh = jnp.dot(d2, w, preferred_element_type=F32)
+            if bias is not None:
+                fresh = fresh + bias.astype(F32)
+            return fresh.astype(o.dtype)
+
+    cd1, cd2 = _encode_d_chunked(d2, rb)
+    cs = _scalar_checksums(cd1, cd2, wck)
+    if tamper_checksums is not None:
+        cs = tamper_checksums(cs)
+
+    adj = _bias_adjust(bias, cb) if bias is not None else None
+
+    def _adjusted_scalars(cs):
+        """c5/c6/c7 with the bias contribution added (Table 5)."""
+        c5, c6, c7 = cs.c5, cs.c6, cs.c7
+        if adj is not None:
+            sum_n = rb * (rb - 1) / 2.0
+            c5 = c5 + rb * adj.b_chunk_sum[None, :]
+            c6 = c6 + sum_n * adj.b_chunk_sum[None, :]
+            c7 = c7 + rb * adj.b_chunk_wsum[None, :]
+        return c5, c6, c7
+
+    if precomputed_sums is not None:
+        s5, s6, s7, sumsq = precomputed_sums
+    else:
+        s5, s6, s7, sumsq = _chunk_sums(o, rb, cb)
+    c5a, c6a, c7a = _adjusted_scalars(cs)
+
+    tau5 = TH.tau_scalar(sumsq, k, o.dtype, cfg.tau_factor, cs.absdot)
+    tau6 = TH.tau_weighted(tau5, rb)
+    tau7 = TH.tau_weighted(tau5, cb)
+
+    detected = jnp.any(TH.mismatch(c5a, s5, tau5))
+    if cfg.detect_weighted:
+        detected = detected | jnp.any(TH.mismatch(c6a, s6, tau6))
+        detected = detected | jnp.any(TH.mismatch(c7a, s7, tau7))
+
+    if cfg.detect_only:
+        det = detected.astype(jnp.int32)
+        return o, T.FaultReport(det, jnp.zeros((), jnp.int32), det)
+
+    # ---------------- correction ladder (lax.cond branch) ----------------
+    w32 = w.astype(F32)
+    d32 = d2.astype(F32)
+
+    def _chunk_view(o):
+        # (nb, mb, rb, cb, P=1) chunk-major view for the vmapped schemes
+        return (o.reshape(nb, rb, mb, cb).transpose(0, 2, 1, 3)
+                [..., None])
+
+    def _unchunk(oc):
+        return oc[..., 0].transpose(0, 2, 1, 3).reshape(n, m)
+
+    def _fresh_cs(o):
+        """Trusted checksums + sums for verification (recomputed)."""
+        cd1f, cd2f = _encode_d_chunked(d2, rb)
+        csf = _scalar_checksums(cd1f, cd2f, wck)
+        return csf
+
+    def _verify(o):
+        csf = _fresh_cs(o)
+        s5v, s6v, s7v, sumsqv = _chunk_sums(o, rb, cb)
+        t5 = TH.tau_scalar(sumsqv, k, o.dtype, cfg.tau_factor, csf.absdot)
+        c5f, c6f, c7f = _adjusted_scalars(csf)
+        ok = ~jnp.any(TH.mismatch(c5f, s5v, t5))
+        ok &= ~jnp.any(TH.mismatch(c6f, s6v, TH.tau_weighted(t5, rb)))
+        ok &= ~jnp.any(TH.mismatch(c7f, s7v, TH.tau_weighted(t5, cb)))
+        return ok
+
+    def _rowcol_checksums(cs):
+        """c1..c4 for the RC/ClC/FC rungs (the expensive GEMVs; only paid
+        inside the correction branch)."""
+        c1 = (cs.cd1 @ w32).reshape(nb, 1, mb, cb).transpose(0, 2, 3, 1)
+        c3 = (cs.cd2 @ w32).reshape(nb, 1, mb, cb).transpose(0, 2, 3, 1)
+        # (nb, mb, rb, 1): D-chunk @ per-chunk weight checksums
+        d3 = d32.reshape(nb, rb, k)
+        c2 = jnp.einsum("brk,mk->bmr", d3, cs.cw1)[..., None]
+        c4 = jnp.einsum("brk,mk->bmr", d3, cs.cw2)[..., None]
+        if adj is not None:
+            sum_n = rb * (rb - 1) / 2.0
+            c1 = c1 + rb * adj.b_chunks[None, :, :, None]
+            c3 = c3 + sum_n * adj.b_chunks[None, :, :, None]
+            c2 = c2 + adj.b_chunk_sum[None, :, None, None]
+            c4 = c4 + adj.b_chunk_wsum[None, :, None, None]
+        return c1, c2, c3, c4
+
+    def _chunk_cs_pytree(cs, need_rowcol: bool):
+        c5a_, c6a_, c7a_ = _adjusted_scalars(cs)
+        if need_rowcol:
+            c1, c2, c3, c4 = _rowcol_checksums(cs)
+        else:
+            zc = jnp.zeros((nb, mb, cb, 1), F32)
+            zr = jnp.zeros((nb, mb, rb, 1), F32)
+            c1, c3 = zc, zc
+            c2, c4 = zr, zr
+        return T.OutputChecksums(c1, c2, c3, c4,
+                                 c5a_[..., None], c6a_[..., None],
+                                 c7a_[..., None])
+
+    def _chunk_ss(o):
+        oc = _chunk_view(o)                                   # (nb,mb,rb,cb,1)
+        wn = jnp.arange(rb, dtype=F32)
+        wm = jnp.arange(cb, dtype=F32)
+        o32 = oc.astype(F32)
+        s1 = jnp.sum(o32, axis=2)[..., 0][..., None]          # (nb,mb,cb,1)
+        s2 = jnp.sum(o32, axis=3)[..., 0][..., None]          # (nb,mb,rb,1)
+        s3 = jnp.einsum("abrcp,r->abcp", o32, wn)
+        s4 = jnp.einsum("abrcp,c->abrp", o32, wm)
+        s5 = jnp.einsum("abcp->abp", s1)
+        s6 = jnp.einsum("abrp,r->abp", s2, wn)
+        s7 = jnp.einsum("abcp,c->abp", s1, wm)
+        sq = jnp.einsum("abrcp,abrcp->ab", o32, o32)
+        return T.OutputSums(s1, s2, s3, s4, s5, s6, s7, sq)
+
+    vmap2 = lambda f: jax.vmap(jax.vmap(f))
+
+    def _run_scheme(scheme_fn, o, need_rowcol, tau_kind):
+        oc = _chunk_view(o)
+        cs_c = _chunk_cs_pytree(cs, need_rowcol)
+        ss_c = _chunk_ss(o)
+        t5 = TH.tau_scalar(ss_c.sumsq, k, o.dtype, cfg.tau_factor, cs.absdot)
+        if tau_kind == "scalar":
+            taus = (t5[..., None],)
+        elif tau_kind == "col":           # per-column residues (RC): each
+            # column sums rb elements ~ sumsq/cb of the chunk's energy
+            taus = (t5[..., None, None] / max(cb, 1) ** 0.5,)
+        elif tau_kind == "row":           # per-row residues (ClC)
+            taus = (t5[..., None, None] / max(rb, 1) ** 0.5,)
+        else:                             # FC needs both
+            taus = (t5[..., None, None] / max(cb, 1) ** 0.5,
+                    t5[..., None, None] / max(rb, 1) ** 0.5)
+        fixed, ok = vmap2(scheme_fn)(oc, cs_c, ss_c, *taus)
+        return _unchunk(fixed), jnp.all(ok)
+
+    rungs = [
+        (T.CHECKSUM_REFRESH, lambda o: (o, jnp.array(True))),  # Fig.3 shortcut:
+        # fresh checksums inside _verify decide whether O was clean all along
+        (T.COC, lambda o: _run_scheme(S.coc_correct, o, False, "scalar")),
+    ]
+    if cfg.rc_enabled:
+        rungs.append((T.RC, lambda o: _run_scheme(S.rc_correct, o, True, "col")))
+    if cfg.clc_enabled:
+        rungs.append((T.CLC, lambda o: _run_scheme(S.clc_correct, o, True, "row")))
+    if cfg.fc_enabled:
+        rungs.append((T.FC, lambda o: _run_scheme(S.fc_correct, o, True, "fc")))
+
+    return run_ladder(o, detected, rungs, _verify, recompute_fn)
+
+
+def protected_matmul(
+    d: jnp.ndarray,
+    w: jnp.ndarray,
+    wck: Optional[WeightChecksums] = None,
+    bias: Optional[jnp.ndarray] = None,
+    cfg: T.ProtectConfig = T.DEFAULT_CONFIG,
+) -> Tuple[jnp.ndarray, T.FaultReport]:
+    """O = D @ W (+ bias) with the full multischeme workflow.
+
+    D may have arbitrary leading batch dims; they are flattened into the
+    block-row axis (more rows = more checksum granularity, not less).
+    """
+    lead = d.shape[:-1]
+    k = d.shape[-1]
+    m = w.shape[-1]
+    d2 = d.reshape(-1, k)
+    if cfg is None or not cfg.enabled:
+        o = jnp.dot(d2, w, preferred_element_type=F32).astype(d.dtype)
+        if bias is not None:
+            o = o + bias.astype(o.dtype)
+        return o.reshape(*lead, m), T.FaultReport.clean()
+
+    if cfg.use_fused_kernel:
+        from repro.kernels import ops as kops
+        rb = pick_chunk(d2.shape[0], cfg.row_chunk)
+        cb = wck.col_chunk if wck is not None else pick_chunk(m, cfg.col_chunk)
+        # tiles must divide the checksum chunks so partials recombine exactly
+        o, parts = kops.abft_matmul(
+            d2, w, interpret=cfg.kernel_interpret,
+            bm=kops._tile(rb, 256), bn=kops._tile(cb, 256))
+        pre = kops.chunk_sums_from_partials(parts, rb, cb)
+    else:
+        o = jnp.dot(d2, w, preferred_element_type=F32).astype(d.dtype)
+        pre = None
+    if bias is not None:
+        o = (o.astype(F32) + bias.astype(F32)).astype(o.dtype)
+    o, rep = protect_matmul_output(d2, w, o, wck=wck, bias=bias, cfg=cfg,
+                                   precomputed_sums=pre)
+    return o.reshape(*lead, m), rep
+
+
+# --------------------------------------------------------------------------
+# backward protection (paper SS5.3)
+# --------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def abft_matmul_vjp(d, w, cfg):
+    o, _ = protected_matmul(d, w, cfg=cfg)
+    return o
+
+
+def _fwd(d, w, cfg):
+    o, _ = protected_matmul(d, w, cfg=cfg)
+    return o, (d, w)
+
+
+def _bwd(cfg, res, g):
+    """dW = D^T @ dO and dD = dO @ W^T, each protected with checksums of the
+    runtime operands (the paper's back-propagation extension: checksums of
+    grad-O play the role of the kernel checksums)."""
+    d, w = res
+    lead = d.shape[:-1]
+    k = d.shape[-1]
+    d2 = d.reshape(-1, k)
+    g2 = g.reshape(-1, g.shape[-1])
+    if cfg.protect_backward:
+        dd2, _ = protected_matmul(g2, w.T.astype(g2.dtype), cfg=cfg)
+        dw, _ = protected_matmul(d2.T, g2.astype(d2.dtype), cfg=cfg)
+    else:
+        dd2 = jnp.dot(g2, w.T.astype(g2.dtype), preferred_element_type=F32)
+        dw = jnp.dot(d2.T, g2.astype(d2.dtype), preferred_element_type=F32)
+    return dd2.reshape(*lead, k).astype(d.dtype), dw.astype(w.dtype)
+
+
+abft_matmul_vjp.defvjp(_fwd, _bwd)
+
+
+# --------------------------------------------------------------------------
+# the protected convolution (the paper's native object)
+# --------------------------------------------------------------------------
+
+def protected_conv(
+    d: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    stride: int = 1,
+    padding="VALID",
+    groups: int = 1,
+    wck: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    cfg: T.ProtectConfig = T.DEFAULT_CONFIG,
+    o: Optional[jnp.ndarray] = None,
+    tamper_checksums: Optional[Callable] = None,
+) -> Tuple[jnp.ndarray, T.FaultReport]:
+    """Protected conv (paper Eq. 1): D[N,Ch,H,H] (x) W[M,Ch,R,R] + bias.
+
+    `o` lets tests inject into a precomputed output; `wck` carries the
+    precomputed (C_w1, C_w2).
+    """
+    conv = lambda: C.conv2d(d, w, stride=stride, padding=padding, groups=groups)
+    if o is None:
+        o = conv()
+    if bias is not None:
+        o = (o.astype(F32) + bias[None, :, None, None].astype(F32)).astype(o.dtype)
+    if cfg is None or not cfg.enabled:
+        return o, T.FaultReport.clean()
+
+    n_, m_ = o.shape[0], o.shape[1]
+    p = o.shape[2] * o.shape[3]
+    k_eq = d.shape[1] * w.shape[2] * w.shape[3]  # Ch*R*R contraction length
+
+    cd1, cd2 = C.encode_d_conv(d)
+    if wck is None:
+        wck = C.encode_w_conv(w, groups=groups)
+    cw1, cw2 = wck
+
+    def recompute_fn():
+        out = conv()
+        if bias is not None:
+            out = (out.astype(F32)
+                   + bias[None, :, None, None].astype(F32)).astype(out.dtype)
+        return out
+
+    def _cs(need_rowcol):
+        cs = C.output_checksums_conv(d, w, cd1, cd2, cw1, cw2, stride=stride,
+                                     padding=padding, groups=groups,
+                                     need_rowcol=need_rowcol)
+        if tamper_checksums is not None:
+            cs = tamper_checksums(cs)
+        if bias is not None:
+            b = bias.astype(F32)
+            sum_n = n_ * (n_ - 1) / 2.0
+            wm = jnp.arange(m_, dtype=F32)
+            cs = T.OutputChecksums(
+                None if cs.c1 is None else cs.c1 + n_ * b[:, None],
+                None if cs.c2 is None else cs.c2 + jnp.sum(b),
+                None if cs.c3 is None else cs.c3 + sum_n * b[:, None],
+                None if cs.c4 is None else cs.c4 + jnp.dot(wm, b),
+                cs.c5 + n_ * jnp.sum(b),
+                cs.c6 + sum_n * jnp.sum(b),
+                cs.c7 + n_ * jnp.dot(wm, b),
+            )
+        return cs
+
+    cs0 = _cs(need_rowcol=False)
+    ss0 = C.output_sums_conv(o)
+    absd = C.absdot_conv(cd1, cw1, stride=stride, padding=padding)
+    tau5 = TH.tau_scalar(ss0.sumsq * jnp.ones(()), k_eq, o.dtype,
+                         cfg.tau_factor, absd)
+    tau5v = jnp.broadcast_to(tau5, (p,))
+    detected = jnp.any(TH.mismatch(cs0.c5, ss0.s5, tau5v))
+    if cfg.detect_weighted:
+        detected |= jnp.any(TH.mismatch(cs0.c6, ss0.s6,
+                                        TH.tau_weighted(tau5v, n_)))
+        detected |= jnp.any(TH.mismatch(cs0.c7, ss0.s7,
+                                        TH.tau_weighted(tau5v, m_)))
+
+    def _norm(o):
+        return o.reshape(n_, m_, p)
+
+    def _denorm(o3):
+        return o3.reshape(o.shape)
+
+    def _verify(oo):
+        ssv = C.output_sums_conv(oo)
+        csf = _cs(need_rowcol=False) if tamper_checksums is None else \
+            C.output_checksums_conv(d, w, *C.encode_d_conv(d),
+                                    *C.encode_w_conv(w, groups=groups),
+                                    stride=stride, padding=padding,
+                                    groups=groups, need_rowcol=False)
+        c5f, c6f, c7f = csf.c5, csf.c6, csf.c7
+        if bias is not None and tamper_checksums is not None:
+            b = bias.astype(F32)
+            sum_n = n_ * (n_ - 1) / 2.0
+            wm = jnp.arange(m_, dtype=F32)
+            c5f = c5f + n_ * jnp.sum(b)
+            c6f = c6f + sum_n * jnp.sum(b)
+            c7f = c7f + n_ * jnp.dot(wm, b)
+        t5 = TH.tau_scalar(ssv.sumsq * jnp.ones(()), k_eq, oo.dtype,
+                           cfg.tau_factor, absd)
+        t5 = jnp.broadcast_to(t5, (p,))
+        ok = ~jnp.any(TH.mismatch(c5f, ssv.s5, t5))
+        ok &= ~jnp.any(TH.mismatch(c6f, ssv.s6, TH.tau_weighted(t5, n_)))
+        ok &= ~jnp.any(TH.mismatch(c7f, ssv.s7, TH.tau_weighted(t5, m_)))
+        return ok
+
+    def _run_scheme(fn, oo, tau_kind):
+        o3 = _norm(oo)
+        cs = _cs(need_rowcol=True)
+        ss = C.output_sums_conv(oo)
+        t5 = TH.tau_scalar(ss.sumsq * jnp.ones(()), k_eq, oo.dtype,
+                           cfg.tau_factor, absd)
+        t5v = jnp.broadcast_to(t5, (p,))
+        if tau_kind == "scalar":
+            taus = (t5v,)
+        elif tau_kind == "col":   # per-(m,p) residues sum over n_ elements
+            taus = (t5v[None, :] / max(m_, 1) ** 0.5,)
+        elif tau_kind == "row":   # per-(n,p) residues sum over m_ elements
+            taus = (t5v[None, :] / max(n_, 1) ** 0.5,)
+        else:
+            taus = (t5v[None, :] / max(m_, 1) ** 0.5,
+                    t5v[None, :] / max(n_, 1) ** 0.5)
+        fixed, ok = fn(o3, cs, ss, *taus)
+        return _denorm(fixed), ok
+
+    rungs = [
+        (T.CHECKSUM_REFRESH, lambda oo: (oo, jnp.array(True))),
+        (T.COC, lambda oo: _run_scheme(S.coc_correct, oo, "scalar")),
+    ]
+    if cfg.rc_enabled:
+        rungs.append((T.RC, lambda oo: _run_scheme(S.rc_correct, oo, "col")))
+    if cfg.clc_enabled:
+        rungs.append((T.CLC, lambda oo: _run_scheme(S.clc_correct, oo, "row")))
+    if cfg.fc_enabled:
+        rungs.append((T.FC, lambda oo: _run_scheme(S.fc_correct, oo, "fc")))
+
+    return run_ladder(o, detected, rungs, _verify, recompute_fn)
+
+
+# --------------------------------------------------------------------------
+# grouped / expert-batched GEMM (paper SS5.2 applied to MoE)
+# --------------------------------------------------------------------------
+
+def protected_grouped_matmul(
+    d: jnp.ndarray,   # (G, N, K) per-group inputs
+    w: jnp.ndarray,   # (G, K, M) per-group weights (experts)
+    cfg: T.ProtectConfig = T.DEFAULT_CONFIG,
+) -> Tuple[jnp.ndarray, T.FaultReport]:
+    """Expert-batched protected GEMM: each group carries its own checksums
+    (the grouped-convolution extension: groups never mix, so per-group
+    invariants are exact)."""
+    if cfg is None or not cfg.enabled:
+        o = jnp.einsum("gnk,gkm->gnm", d, w,
+                       preferred_element_type=F32).astype(d.dtype)
+        return o, T.FaultReport.clean()
+
+    def one(dg, wg):
+        return protected_matmul(dg, wg, cfg=cfg)
+
+    o, reps = jax.vmap(one)(d, w)
+    rep = T.FaultReport(jnp.max(reps.detected), jnp.max(reps.corrected_by),
+                        jnp.max(reps.residual))
+    return o, rep

@@ -1,0 +1,136 @@
+"""The four ABFT schemes of the paper (SS3.3-3.6) over the normalised block
+form: O is (N, M, P) where rows/columns are the paper's blocks and P is the
+per-block payload (1 for matmul, E*E for conv). Elements along P are
+independent checksum problems (paper: "elements inside the same block are
+independent with respect to checksums").
+
+Everything is jit-safe: location uses arithmetic + one-hot masks, never
+dynamic python control flow. Each corrector returns (O_fixed, ok) where ok
+means "every flagged discrepancy was resolved by a legal location"; the
+workflow re-verifies and escalates when ok is False (paper Fig. 7).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from .thresholds import mismatch
+from .types import OutputChecksums, OutputSums
+
+F32 = jnp.float32
+
+
+def _round_index(x_f: jnp.ndarray, size: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Round a float locator to an integer index; legal iff near-integral
+    and in range. Non-finite locators are illegal."""
+    finite = jnp.isfinite(x_f)
+    x_f = jnp.where(finite, x_f, -1.0)
+    idx = jnp.round(x_f)
+    legal = finite & (jnp.abs(x_f - idx) <= 0.25) & (idx >= 0) & (idx < size)
+    return idx.astype(jnp.int32), legal
+
+
+def detect(cs: OutputChecksums, ss: OutputSums, tau5, tau6, tau7,
+           weighted: bool = True) -> jnp.ndarray:
+    """CoC-D (paper SS3.6): compare C_o5 with S_o5. `weighted` additionally
+    compares the index-weighted invariants (beyond-paper; free with the
+    fused kernel and catches faults that cancel in the plain sum)."""
+    bad = jnp.any(mismatch(cs.c5, ss.s5, tau5))
+    if weighted:
+        bad = bad | jnp.any(mismatch(cs.c6, ss.s6, tau6))
+        bad = bad | jnp.any(mismatch(cs.c7, ss.s7, tau7))
+    return bad
+
+
+def coc_correct(o: jnp.ndarray, cs: OutputChecksums, ss: OutputSums,
+                tau5) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """CoC (paper SS3.6): locate a single corrupted block via the weighted
+    checksum ratios and add delta back. O: (N, M, P)."""
+    n, m, _ = o.shape
+    delta = (cs.c5 - ss.s5).astype(F32)                    # (P,)
+    flagged = jnp.abs(delta) > tau5
+    safe = jnp.where(flagged, delta, 1.0)
+    i_idx, i_ok = _round_index((cs.c6 - ss.s6) / safe, n)
+    j_idx, j_ok = _round_index((cs.c7 - ss.s7) / safe, m)
+    legal = i_ok & j_ok
+    # one corrupted block per payload element: scatter delta at (i, j)
+    hit = ((jnp.arange(n, dtype=jnp.int32)[:, None, None] == i_idx[None, None, :])
+           & (jnp.arange(m, dtype=jnp.int32)[None, :, None] == j_idx[None, None, :]))
+    upd = jnp.where(hit & flagged[None, None, :] & legal[None, None, :],
+                    delta[None, None, :], 0.0)
+    fixed = (o.astype(F32) + upd).astype(o.dtype)
+    ok = jnp.all(jnp.where(flagged, legal, True))
+    return fixed, ok
+
+
+def rc_correct(o: jnp.ndarray, cs: OutputChecksums, ss: OutputSums,
+               tau1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """RC (paper SS3.4): per column m, locate the corrupted row via
+    i = (C_o3-S_o3)/(C_o1-S_o1); corrects any pattern with at most one bad
+    element per column (in particular a whole corrupted block-row)."""
+    n, m, _ = o.shape
+    diff = (cs.c1 - ss.s1).astype(F32)                     # (M, P)
+    flagged = jnp.abs(diff) > tau1
+    safe = jnp.where(flagged, diff, 1.0)
+    i_idx, legal = _round_index((cs.c3 - ss.s3) / safe, n)
+    hit = jnp.arange(n, dtype=jnp.int32)[:, None, None] == i_idx[None, :, :]
+    upd = jnp.where(hit & flagged[None] & legal[None], diff[None], 0.0)
+    fixed = (o.astype(F32) + upd).astype(o.dtype)
+    # vacuously ok when nothing is flagged: the workflow's re-verification
+    # decides whether this rung actually resolved the detection.
+    ok = jnp.all(jnp.where(flagged, legal, True))
+    return fixed, ok
+
+
+def clc_correct(o: jnp.ndarray, cs: OutputChecksums, ss: OutputSums,
+                tau2) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """ClC (paper SS3.5): symmetric to RC - per row n locate the corrupted
+    column via j = (C_o4-S_o4)/(C_o2-S_o2)."""
+    n, m, _ = o.shape
+    diff = (cs.c2 - ss.s2).astype(F32)                     # (N, P)
+    flagged = jnp.abs(diff) > tau2
+    safe = jnp.where(flagged, diff, 1.0)
+    j_idx, legal = _round_index((cs.c4 - ss.s4) / safe, m)
+    hit = jnp.arange(m, dtype=jnp.int32)[None, :, None] == j_idx[:, None, :]
+    upd = jnp.where(hit & flagged[:, None] & legal[:, None], diff[:, None], 0.0)
+    fixed = (o.astype(F32) + upd).astype(o.dtype)
+    ok = jnp.all(jnp.where(flagged, legal, True))
+    return fixed, ok
+
+
+def fc_correct(o: jnp.ndarray, cs: OutputChecksums, ss: OutputSums,
+               tau1, tau2) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """FC (paper SS3.3 + SS4.1.6): row+column checksums.
+
+    - exactly one bad row index  -> repair that row with column residues
+    - exactly one bad column     -> repair that column with row residues
+    - no bad rows/columns        -> O already consistent (the detection was
+      caused by corrupted CoC checksums, Fig. 3/5) -> accept O as-is
+    - anything else              -> not correctable here (ok=False)
+    """
+    n, m, _ = o.shape
+    res1 = (cs.c1 - ss.s1).astype(F32)                     # (M, P) column residues
+    res2 = (cs.c2 - ss.s2).astype(F32)                     # (N, P) row residues
+    mm1 = jnp.abs(res1) > tau1
+    mm2 = jnp.abs(res2) > tau2
+    colbad = jnp.any(mm1, axis=-1)                         # (M,)
+    rowbad = jnp.any(mm2, axis=-1)                         # (N,)
+    n_col = jnp.sum(colbad.astype(jnp.int32))
+    n_row = jnp.sum(rowbad.astype(jnp.int32))
+
+    i_star = jnp.argmax(rowbad)                            # only used if n_row==1
+    j_star = jnp.argmax(colbad)
+
+    row_hit = jnp.arange(n, dtype=jnp.int32)[:, None, None] == i_star
+    col_hit = jnp.arange(m, dtype=jnp.int32)[None, :, None] == j_star
+    row_fix = jnp.where(row_hit & mm1[None], res1[None], 0.0)      # fix row i*
+    col_fix = jnp.where(col_hit & mm2[:, None], res2[:, None], 0.0)  # fix col j*
+
+    use_row = n_row == 1
+    use_col = (~use_row) & (n_col == 1)
+    upd = jnp.where(use_row, row_fix, jnp.where(use_col, col_fix, 0.0))
+    fixed = (o.astype(F32) + upd).astype(o.dtype)
+    clean = (n_row == 0) & (n_col == 0)
+    ok = use_row | use_col | clean
+    return fixed, ok

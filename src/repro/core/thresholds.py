@@ -1,0 +1,52 @@
+"""Detection-threshold model for low-precision ABFT.
+
+The paper assumes fp32 arithmetic where checksum equality holds to rounding
+noise; on TPU the output is typically stored in bf16 while checksums are
+carried in fp32, so the comparison noise is dominated by the per-element
+rounding of O:
+
+    noise(S - C) ~ eps_out * sqrt(sum O^2)        (random-walk over rounding)
+                 + eps_f32 * sqrt(K) * sqrt(sum O^2)   (order-of-accumulation)
+                 + eps_f32 * absdot                 (checksum-side rounding)
+
+tau is that estimate times a safety factor. Anything below tau is both
+undetectable and - by the same argument - within the computation's own
+rounding noise, i.e. not a silent data corruption in any material sense.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_F32_EPS = float(jnp.finfo(jnp.float32).eps)
+
+
+def out_eps(dtype) -> float:
+    return float(jnp.finfo(dtype).eps) if jnp.issubdtype(dtype, jnp.floating) else _F32_EPS
+
+
+def tau_scalar(sumsq, k_dim: int, o_dtype, factor: float, absdot=None):
+    """Threshold for scalar invariants (s5/s6/s7 vs c5/c6/c7).
+
+    sumsq may be any shape (per-chunk); returns the matching shape.
+    """
+    eps = out_eps(o_dtype)
+    scale = jnp.sqrt(jnp.maximum(sumsq.astype(jnp.float32), 0.0))
+    tau = factor * (eps + _F32_EPS * (float(k_dim) ** 0.5)) * scale
+    if absdot is not None:
+        tau = tau + factor * _F32_EPS * absdot
+    # absolute floor so exactly-zero chunks never flag on denormal dust
+    return tau + 1e-30
+
+
+def tau_weighted(tau5, n_or_m: int):
+    """Threshold for index-weighted invariants: weights up to (n-1) amplify
+    the rounding noise by at most the index range."""
+    return tau5 * float(max(n_or_m - 1, 1))
+
+
+def mismatch(c, s, tau):
+    """Elementwise |c - s| > tau, NaN/Inf-safe (non-finite -> mismatch)."""
+    c = c.astype(jnp.float32)
+    s = s.astype(jnp.float32)
+    bad = ~(jnp.isfinite(c) & jnp.isfinite(s))
+    return bad | (jnp.abs(c - s) > tau)

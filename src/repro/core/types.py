@@ -1,0 +1,122 @@
+"""Shared types for the ABFT core.
+
+Scheme enum values follow the escalation order of the paper's multischeme
+workflow (Fig. 7): CoC-D detects; CoC -> RC/ClC -> FC correct; full
+recompute is the last resort.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+# corrected_by enum (kept as plain ints so they live inside jit).
+NONE = 0          # no fault detected
+COC = 1           # corrected by checksum-of-checksums
+RC = 2            # corrected by row checksum scheme
+CLC = 3           # corrected by column checksum scheme
+FC = 4            # corrected by full checksum scheme
+CHECKSUM_REFRESH = 5  # detection was caused by a corrupted checksum; output clean
+RECOMPUTE = 6     # recomputed the whole operation
+
+SCHEME_NAMES = {
+    NONE: "none", COC: "coc", RC: "rc", CLC: "clc", FC: "fc",
+    CHECKSUM_REFRESH: "checksum_refresh", RECOMPUTE: "recompute",
+}
+
+
+class FaultReport(NamedTuple):
+    """Verdict of one protected op. All fields are scalar jnp arrays so the
+    report can cross a jit boundary and be aggregated across layers."""
+    detected: jnp.ndarray      # i32: 1 if CoC-D flagged the op
+    corrected_by: jnp.ndarray  # i32: scheme enum that resolved it
+    residual: jnp.ndarray      # i32: 1 if inconsistency survived all schemes
+
+    @staticmethod
+    def clean() -> "FaultReport":
+        z = jnp.zeros((), jnp.int32)
+        return FaultReport(z, z, z)
+
+    @staticmethod
+    def merge(a: "FaultReport", b: "FaultReport") -> "FaultReport":
+        return FaultReport(
+            jnp.maximum(a.detected, b.detected),
+            jnp.maximum(a.corrected_by, b.corrected_by),
+            jnp.maximum(a.residual, b.residual),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtectConfig:
+    """Static configuration of a protected op (hashable: safe as a jit
+    static argument)."""
+    enabled: bool = True
+    # Layerwise RC/ClC enablement (paper SS4.3). Decided offline by
+    # repro.core.policy; static so disabled schemes cost nothing.
+    rc_enabled: bool = True
+    clc_enabled: bool = True
+    fc_enabled: bool = True
+    # Chunk sizes for the matmul path. Each (row_chunk x col_chunk) tile of O
+    # carries independent checksums: bounds index-weight magnitude (locator
+    # precision in low precision) and lets disjoint chunks correct
+    # independent faults (the paper's "elements across blocks are
+    # independent" argument, lifted to tiles).
+    row_chunk: int = 1024
+    col_chunk: int = 1024
+    # Safety factor for detection thresholds (see thresholds.py).
+    tau_factor: float = 32.0
+    # Also compare the index-weighted invariants (s6/s7) during detection.
+    # Free with the fused kernel; catches symmetric multi-fault patterns
+    # that cancel in s5. Beyond-paper (paper's CoC-D uses C_o5 only).
+    detect_weighted: bool = True
+    # Protect the backward pass (paper SS5.3).
+    protect_backward: bool = True
+    # Detection-only (the paper's CoC-D stage): skip the in-graph
+    # correction ladder and surface the verdict - the driver recomputes
+    # the step (runtime.ft). Production serving mode: the rarely-taken
+    # correction branches never enter the compiled program.
+    detect_only: bool = False
+    # Use the Pallas fused-epilogue kernel for O + summations.
+    use_fused_kernel: bool = False
+    # Interpret mode for the Pallas kernel (CPU validation).
+    kernel_interpret: bool = True
+
+    def replace(self, **kw) -> "ProtectConfig":
+        return dataclasses.replace(self, **kw)
+
+
+DEFAULT_CONFIG = ProtectConfig()
+
+
+class OutputSums(NamedTuple):
+    """The seven output summations of the paper (S_o1..S_o7) plus the
+    sum-of-squares used by the threshold model.
+
+    Normalised block form: O is (N, M, P); P is the per-block payload
+    (1 for matmul; E*E for conv).
+    """
+    s1: jnp.ndarray  # (M, P)  sum_n O[n,m]
+    s2: jnp.ndarray  # (N, P)  sum_m O[n,m]
+    s3: jnp.ndarray  # (M, P)  sum_n n*O[n,m]
+    s4: jnp.ndarray  # (N, P)  sum_m m*O[n,m]
+    s5: jnp.ndarray  # (P,)    sum_nm O
+    s6: jnp.ndarray  # (P,)    sum_nm n*O
+    s7: jnp.ndarray  # (P,)    sum_nm m*O
+    sumsq: jnp.ndarray  # ()   sum_nmp O^2 (threshold scale)
+
+
+class OutputChecksums(NamedTuple):
+    """Checksum-side predictions C_o1..C_o7 (paper Eq. 6), normalised.
+
+    Note on naming: we fix the paper's SS3.6 index swap - here c_o6 is the
+    n-weighted invariant (row locator) and c_o7 the m-weighted one (column
+    locator), matching the correction formulas actually used in SS3.6.
+    """
+    c1: Optional[jnp.ndarray]  # (M, P) = C_d1 (x) W
+    c2: Optional[jnp.ndarray]  # (N, P) = D (x) C_w1
+    c3: Optional[jnp.ndarray]  # (M, P) = C_d2 (x) W
+    c4: Optional[jnp.ndarray]  # (N, P) = D (x) C_w2
+    c5: jnp.ndarray            # (P,)   = C_d1 (x) C_w1
+    c6: jnp.ndarray            # (P,)   = C_d2 (x) C_w1   (n-weighted)
+    c7: jnp.ndarray            # (P,)   = C_d1 (x) C_w2   (m-weighted)

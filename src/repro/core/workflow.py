@@ -1,0 +1,74 @@
+"""Multischeme workflow engine (paper SS4.3, Fig. 7).
+
+Detection (CoC-D) runs on every protected op; the correction ladder
+CoC -> RC -> ClC -> FC -> recompute runs inside a `lax.cond` branch so the
+error-free path pays nothing beyond detection. Every rung re-verifies the
+corrected output against *fresh* checksums before accepting (the paper's
+"invoke the next-level scheme on failure").
+
+The ladder is assembled from static config (layerwise RC/ClC enablement is
+a compile-time choice, matching the paper's per-layer offline decision), so
+disabled rungs are not even traced.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import types as T
+
+# A rung: o -> (o_fixed, ok). Verification is applied by the engine.
+Rung = Tuple[int, Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]]]
+
+
+def run_ladder(
+    o: jnp.ndarray,
+    detected: jnp.ndarray,
+    rungs: List[Rung],
+    verify_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    recompute_fn: Callable[[], jnp.ndarray],
+) -> Tuple[jnp.ndarray, T.FaultReport]:
+    """Escalate through `rungs` until one verifies; fall back to recompute.
+
+    verify_fn(o) must re-derive the output summations of `o` and compare
+    against trusted (freshly recomputed) checksums - returning a scalar bool.
+    """
+
+    def _clean(o):
+        z = jnp.zeros((), jnp.int32)
+        return o, z, z
+
+    def _correct(o):
+        by = jnp.zeros((), jnp.int32)
+
+        for enum_val, fn in rungs:
+            # apply rung only while uncorrected; lax.cond keeps the rung's
+            # cost out of the path once a lower rung succeeded.
+            def _attempt(args, fn=fn, enum_val=enum_val):
+                o, by = args
+                fixed, ok = fn(o)
+                ok = ok & verify_fn(fixed)
+                o = jnp.where(ok, fixed, o)
+                by = jnp.where(ok, jnp.int32(enum_val), by)
+                return o, by
+
+            def _skip(args):
+                return args
+
+            o, by = jax.lax.cond(by == 0, _attempt, _skip, (o, by))
+
+        # last resort: full recompute (paper SS4.1.1 for multi-fault cases)
+        def _recompute(args):
+            o, by = args
+            fresh = recompute_fn()
+            return fresh, jnp.int32(T.RECOMPUTE)
+
+        o, by = jax.lax.cond(by == 0, _recompute, _skip, (o, by))
+        residual = jnp.where(verify_fn(o), 0, 1).astype(jnp.int32)
+        return o, by, residual
+
+    o, by, residual = jax.lax.cond(detected, _correct, _clean, o)
+    report = T.FaultReport(detected.astype(jnp.int32), by, residual)
+    return o, report

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, DataIterator, host_batch
+
+__all__ = ["DataConfig", "DataIterator", "host_batch"]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the ABFT hot spots.
+
+- abft_matmul: GEMM with the output-summation encode fused into the
+  epilogue (eliminates the paper's beta-term re-read of O).
+- checksum_reduce: single-pass S_o encode of an existing output.
+
+Both validate in interpret mode against the pure-jnp oracles in ref.py.
+"""
+from . import ops, ref
+from .abft_matmul import abft_matmul as abft_matmul_kernel
+from .checksum_reduce import checksum_reduce as checksum_reduce_kernel
+
+__all__ = ["ops", "ref", "abft_matmul_kernel", "checksum_reduce_kernel"]

@@ -1,0 +1,113 @@
+"""Fused ABFT matmul: O = D @ W with the output-summation encode folded
+into the GEMM epilogue.
+
+The paper's runtime model (Table 3/4) charges a beta-weighted *extra pass*
+over O to encode the output summations (S_o). On TPU that pass is a second
+HBM round-trip of the largest tensor in the op. Here the per-tile partial
+row/column sums and the sum-of-squares (threshold scale) are computed while
+the accumulator tile is still in VMEM and written as tiny partials:
+
+    colsum : (N/bm, M)   per-row-tile column sums   -> S_o1/S_o5/S_o7
+    rowsum : (N, M/bn)   per-col-tile row sums      -> S_o2/S_o6
+    sumsq  : (N/bm, M/bn) per-tile sum of squares   -> detection threshold
+
+A negligible jnp reduction (repro.kernels.ops.chunk_sums_from_partials)
+finishes them at any chunk granularity that is a multiple of the tile. The
+index-weighted invariants need no extra kernel outputs: full column (row)
+resolution of colsum (rowsum) lets the wrapper apply local index weights
+exactly.
+
+MXU alignment: tiles default to 256x256x256 (fp32 grid multiples of the
+128x128 systolic array); the fp32 accumulator lives in VMEM scratch.
+VMEM working set at defaults: D-tile + W-tile + O-tile + acc
+= 4 * 256*256*4B = 1 MiB, well under the ~16 MiB/core budget, leaving
+room for double buffering of the streamed D/W tiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU compiler params are versioned; interpret mode needs none
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+F32 = jnp.float32
+
+
+def _kernel(d_ref, w_ref, o_ref, colsum_ref, rowsum_ref, sumsq_ref,
+            acc_ref, *, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(d_ref[...].astype(F32), w_ref[...].astype(F32),
+                            preferred_element_type=F32)
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        o_ref[...] = acc.astype(o_ref.dtype)
+        # checksum epilogue: tile is in VMEM - the extra HBM traffic is
+        # (M + N*M/bn + N*M/bm) fp32 words instead of a full re-read of O.
+        colsum_ref[...] = jnp.sum(acc, axis=0, keepdims=True)
+        rowsum_ref[...] = jnp.sum(acc, axis=1, keepdims=True)
+        sumsq_ref[...] = jnp.sum(acc * acc).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
+                                             "out_dtype"))
+def abft_matmul(d: jnp.ndarray, w: jnp.ndarray, *, bm: int = 256,
+                bn: int = 256, bk: int = 256, interpret: bool = True,
+                out_dtype=None) -> Tuple[jnp.ndarray, Tuple]:
+    """Returns (O, (colsum, rowsum, sumsq)). Shapes must tile evenly; the
+    ops.py wrapper falls back to the jnp reference otherwise."""
+    n, k = d.shape
+    k2, m = w.shape
+    assert k == k2, (d.shape, w.shape)
+    bm, bn, bk = min(bm, n), min(bn, m), min(bk, k)
+    assert n % bm == 0 and m % bn == 0 and k % bk == 0, (
+        f"abft_matmul needs tile-aligned shapes, got {(n, k, m)} with "
+        f"tiles {(bm, bk, bn)}")
+    out_dtype = out_dtype or d.dtype
+    grid = (n // bm, m // bn, k // bk)
+
+    kernel = functools.partial(_kernel, k_steps=grid[2])
+    kwargs = {}
+    if not interpret and pltpu is not None:  # pragma: no cover (TPU only)
+        params = getattr(pltpu, "CompilerParams", None) or getattr(
+            pltpu, "TPUCompilerParams")
+        kwargs["compiler_params"] = params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    o, colsum, rowsum, sumsq = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, m), out_dtype),
+            jax.ShapeDtypeStruct((n // bm, m), F32),
+            jax.ShapeDtypeStruct((n, m // bn), F32),
+            jax.ShapeDtypeStruct((n // bm, m // bn), F32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), F32)],
+        interpret=interpret,
+        **kwargs,
+    )(d, w)
+    return o, (colsum, rowsum, sumsq, bm, bn)

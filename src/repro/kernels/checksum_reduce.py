@@ -1,0 +1,65 @@
+"""Single-pass output-summation encode for an existing O[N,M].
+
+The conv/attention outputs of the paper's workflow need S_o sums even when
+the producing op is not our fused GEMM (XLA conv, attention, an external
+library - "any convolution implementation"). This kernel reads O exactly
+once from HBM and emits the same partials as the fused epilogue
+(colsum/rowsum/sumsq), replacing the multiple beta-passes of the paper's
+encode step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+F32 = jnp.float32
+
+
+def _kernel(o_ref, colsum_ref, rowsum_ref, sumsq_ref):
+    tile = o_ref[...].astype(F32)
+    colsum_ref[...] = jnp.sum(tile, axis=0, keepdims=True)
+    rowsum_ref[...] = jnp.sum(tile, axis=1, keepdims=True)
+    sumsq_ref[...] = jnp.sum(tile * tile).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def checksum_reduce(o: jnp.ndarray, *, bm: int = 512, bn: int = 512,
+                    interpret: bool = True) -> Tuple:
+    """Returns (colsum (N/bm, M), rowsum (N, M/bn), sumsq (N/bm, M/bn))."""
+    n, m = o.shape
+    bm, bn = min(bm, n), min(bn, m)
+    assert n % bm == 0 and m % bn == 0, (o.shape, bm, bn)
+    grid = (n // bm, m // bn)
+    kwargs = {}
+    if not interpret and pltpu is not None:  # pragma: no cover
+        params = getattr(pltpu, "CompilerParams", None) or getattr(
+            pltpu, "TPUCompilerParams")
+        kwargs["compiler_params"] = params(
+            dimension_semantics=("parallel", "parallel"))
+    colsum, rowsum, sumsq = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((1, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n // bm, m), F32),
+            jax.ShapeDtypeStruct((n, m // bn), F32),
+            jax.ShapeDtypeStruct((n // bm, m // bn), F32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(o)
+    return colsum, rowsum, sumsq, bm, bn

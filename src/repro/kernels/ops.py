@@ -1,0 +1,72 @@
+"""Jit'd wrappers around the Pallas kernels, with shape-aligned dispatch and
+the partial->chunk-sum plumbing used by repro.core.protected."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .abft_matmul import abft_matmul as _abft_matmul_kernel
+from .checksum_reduce import checksum_reduce as _checksum_reduce_kernel
+
+F32 = jnp.float32
+
+
+def _tile(n: int, target: int) -> int:
+    """Largest power-of-two divisor of n that is <= target (>=1)."""
+    t = 1
+    while t * 2 <= target and n % (t * 2) == 0:
+        t *= 2
+    return t
+
+
+def abft_matmul(d: jnp.ndarray, w: jnp.ndarray, *, interpret: bool = True,
+                bm: int = 256, bn: int = 256, bk: int = 256,
+                out_dtype=None) -> Tuple[jnp.ndarray, Tuple]:
+    """Fused GEMM + checksum epilogue; falls back to the jnp oracle when the
+    shapes do not tile (the ABFT algebra is implementation-agnostic, so the
+    fallback is bit-compatible with the protection layer)."""
+    n, k = d.shape
+    m = w.shape[1]
+    bm_, bn_, bk_ = _tile(n, bm), _tile(m, bn), _tile(k, bk)
+    if min(bm_, bn_, bk_) < 8:  # degenerate tiling: not worth a kernel
+        return _ref.abft_matmul_ref(d, w, bm_, bn_, out_dtype)
+    return _abft_matmul_kernel(d, w, bm=bm_, bn=bn_, bk=bk_,
+                               interpret=interpret, out_dtype=out_dtype)
+
+
+def checksum_reduce(o: jnp.ndarray, *, interpret: bool = True,
+                    bm: int = 512, bn: int = 512) -> Tuple:
+    n, m = o.shape
+    bm_, bn_ = _tile(n, bm), _tile(m, bn)
+    if min(bm_, bn_) < 8:
+        return (*_ref.checksum_reduce_ref(o, bm_, bn_), bm_, bn_)
+    return _checksum_reduce_kernel(o, bm=bm_, bn=bn_, interpret=interpret)
+
+
+def chunk_sums_from_partials(parts, rb: int, cb: int):
+    """Finish the kernel partials into per-chunk (s5, s6, s7, sumsq).
+
+    colsum has full column resolution -> exact local-index m-weighting for
+    s7; rowsum has full row resolution -> exact n-weighting for s6. Cost is
+    O(N*M/bn + M*N/bm), negligible next to the GEMM.
+    """
+    colsum, rowsum, sumsq, bm, bn = parts
+    nt, m = colsum.shape
+    n = rowsum.shape[0]
+    if rb % bm != 0 or cb % bn != 0:
+        # chunk not tile-aligned: recombine at element resolution (rare;
+        # happens only for exotic chunk configs)
+        raise ValueError(f"chunk ({rb},{cb}) must be a multiple of the "
+                         f"kernel tile ({bm},{bn})")
+    nb, mb = n // rb, m // cb
+    cs = colsum.reshape(nb, rb // bm, mb, cb)
+    rs = rowsum.reshape(nb, rb, mb, cb // bn)
+    s5 = jnp.einsum("atbc->ab", cs)
+    s7 = jnp.einsum("atbc,c->ab", cs, jnp.arange(cb, dtype=F32))
+    s6 = jnp.einsum("arbt,r->ab", rs, jnp.arange(rb, dtype=F32))
+    sq = sumsq.reshape(nb, rb // bm, mb, cb // bn).sum(axis=(1, 3))
+    return s5, s6, s7, sq

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (per-kernel allclose targets)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def abft_matmul_ref(d: jnp.ndarray, w: jnp.ndarray, bm: int, bn: int,
+                    out_dtype=None) -> Tuple[jnp.ndarray, Tuple]:
+    """Oracle for kernels.abft_matmul: fp32-accumulated matmul + the same
+    tile-partial sums (computed from the fp32 product, as the kernel does)."""
+    out_dtype = out_dtype or d.dtype
+    acc = jnp.dot(d.astype(F32), w.astype(F32), preferred_element_type=F32)
+    o = acc.astype(out_dtype)
+    colsum, rowsum, sumsq = checksum_reduce_ref(acc, bm, bn)
+    return o, (colsum, rowsum, sumsq, bm, bn)
+
+
+def checksum_reduce_ref(o: jnp.ndarray, bm: int, bn: int) -> Tuple:
+    n, m = o.shape
+    o32 = o.astype(F32)
+    colsum = o32.reshape(n // bm, bm, m).sum(axis=1)
+    rowsum = o32.reshape(n, m // bn, bn).sum(axis=2)
+    sumsq = (o32 * o32).reshape(n // bm, bm, m // bn, bn).sum(axis=(1, 3))
+    return colsum, rowsum, sumsq
+
+
+def chunk_sums_ref(o: jnp.ndarray, rb: int, cb: int):
+    """Oracle for ops.chunk_sums_from_partials: the (s5, s6, s7, sumsq)
+    per-chunk values computed directly from O."""
+    n, m = o.shape
+    nb, mb = n // rb, m // cb
+    o4 = o.astype(F32).reshape(nb, rb, mb, cb)
+    s5 = jnp.einsum("arbc->ab", o4)
+    s6 = jnp.einsum("arbc,r->ab", o4, jnp.arange(rb, dtype=F32))
+    s7 = jnp.einsum("arbc,c->ab", o4, jnp.arange(cb, dtype=F32))
+    sumsq = jnp.einsum("arbc,arbc->ab", o4, o4)
+    return s5, s6, s7, sumsq

@@ -1,0 +1,6 @@
+"""Launchers. NOTE: repro.launch.dryrun force-sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 at import; never
+import it from tests or library code - run it as a script."""
+from . import mesh, steps
+
+__all__ = ["mesh", "steps"]

@@ -1,0 +1,76 @@
+"""Batched serving driver: prefill + decode loop with ABFT protection and
+per-step fault verdicts.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m-smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.models.transformer import init_params
+
+
+def serve(arch: str, batch: int, prompt_len: int, gen: int, seed: int = 0):
+    cfg = C.get(arch)
+    key = jax.random.PRNGKey(seed)
+    params = init_params(key, cfg)
+    max_len = prompt_len + gen
+
+    tok_shape = ((batch, prompt_len, cfg.num_codebooks) if cfg.num_codebooks
+                 else (batch, prompt_len))
+    prompts = jax.random.randint(key, tok_shape, 0, cfg.vocab_size,
+                                 jnp.int32)
+
+    prefill_fn = jax.jit(make_prefill_step(cfg, max_len))
+    serve_fn = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+    t0 = time.time()
+    out = prefill_fn(params, {"tokens": prompts})
+    caches = out["caches"]
+    nxt = jnp.argmax(out["logits"], axis=-1).astype(jnp.int32)
+    if cfg.num_codebooks and nxt.ndim == 2:
+        nxt = nxt[..., None].repeat(cfg.num_codebooks, -1)
+    t_prefill = time.time() - t0
+
+    positions = jnp.asarray(prompt_len, jnp.int32)
+    # host copies: the batch arg is donated to the decode step, so device
+    # buffers from previous iterations are invalidated
+    generated = [np.asarray(nxt)]
+    reports = []
+    t0 = time.time()
+    for _ in range(gen - 1):
+        out = serve_fn(params, {"tokens": nxt, "positions": positions,
+                                "caches": caches})
+        caches, positions = out["caches"], out["positions"]
+        nxt = out["next_tokens"]
+        reports.append(jax.tree.map(np.asarray, out["report"]))
+        generated.append(np.asarray(nxt))
+    t_decode = time.time() - t0
+    tokens_out = jnp.concatenate([jnp.asarray(g) for g in generated], axis=1)
+    detected = sum(int(r.detected) for r in reports)
+    return tokens_out, {"prefill_s": t_prefill, "decode_s": t_decode,
+                        "tok_per_s": batch * (gen - 1) / max(t_decode, 1e-9),
+                        "faults_detected": detected}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    toks, stats = serve(args.arch, args.batch, args.prompt_len, args.gen)
+    print(f"generated {toks.shape} tokens; {stats}")
+
+
+if __name__ == "__main__":
+    main()

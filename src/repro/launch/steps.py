@@ -1,0 +1,141 @@
+"""Step functions (train / prefill / serve) shared by the drivers, the
+dry-run, and the tests.
+
+train_step supports microbatch gradient accumulation (lax.scan) - the
+activation-memory knob for the large cells - and emits the merged
+FaultReport so the FT runtime can apply verdict-driven retry.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import FaultReport
+from repro.models import transformer as M
+from repro.optim import (OptConfig, apply_updates, clip_by_global_norm,
+                         cosine_schedule, init_opt_state)
+
+F32 = jnp.float32
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mesh_axes: Optional[Tuple] = None) -> jnp.ndarray:
+    """Mean NLL; multi-codebook labels average over codebooks.
+
+    Vocab-shard friendly: the target logit is extracted with a fused
+    iota==label product (partial-sum over the sharded vocab axis + psum)
+    instead of take_along_axis, which would all-gather the (B,S,V) tensor
+    across model shards."""
+    if mesh_axes is not None:
+        dp, tp = mesh_axes
+        spec = (P(dp, None, None, tp) if logits.ndim == 4
+                else P(dp, None, tp))
+        logits = jax.lax.with_sharding_constraint(logits, spec)
+    l32 = logits.astype(F32)
+    lse = jax.scipy.special.logsumexp(l32, axis=-1)
+    v = logits.shape[-1]
+    onehot_hit = (jax.lax.broadcasted_iota(jnp.int32, l32.shape, l32.ndim - 1)
+                  == labels[..., None].astype(jnp.int32))
+    tgt = jnp.sum(jnp.where(onehot_hit, l32, 0.0), axis=-1)
+    return jnp.mean(lse - tgt)
+
+
+def init_train_state(key, cfg: ModelConfig, opt_cfg: OptConfig) -> Dict:
+    params = M.init_params(key, cfg)
+    return {"params": params, "opt": init_opt_state(params, opt_cfg),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                    microbatches: int = 1,
+                    mesh_axes: Optional[Tuple] = None,
+                    total_steps: int = 10000, warmup: int = 100,
+                    grad_dtype=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    grad_dtype: dtype of the microbatch gradient accumulator (default
+    fp32; bf16 halves the accumulator HBM - a SSPerf memory lever)."""
+    lr_fn = cosine_schedule(opt_cfg.lr, warmup, total_steps)
+    acc_dtype = jnp.dtype(grad_dtype) if grad_dtype else F32
+
+    def loss_fn(params, tokens, labels):
+        logits, rep, aux = M.forward_train(params, tokens, cfg)
+        loss = cross_entropy(logits, labels, mesh_axes)
+        if cfg.num_experts:
+            loss = loss + 0.01 * aux
+        return loss, rep
+
+    def one_micro(params, tokens, labels):
+        (loss, rep), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, tokens, labels)
+        return loss, rep, grads
+
+    def train_step(state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        params = state["params"]
+        if microbatches > 1:
+            b = tokens.shape[0]
+            mb = b // microbatches
+            tk = tokens.reshape(microbatches, mb, *tokens.shape[1:])
+            lb = labels.reshape(microbatches, mb, *labels.shape[1:])
+            if mesh_axes is not None:
+                # keep the per-microbatch batch axis on the DP axes (the
+                # reshape must not trigger a regather)
+                dp, _ = mesh_axes
+                spec = P(None, dp, *([None] * (tokens.ndim - 1)))
+                tk = jax.lax.with_sharding_constraint(tk, spec)
+                lb = jax.lax.with_sharding_constraint(lb, spec)
+
+            def scan_fn(carry, xs):
+                loss_acc, rep_acc, gacc = carry
+                t, l = xs
+                loss, rep, grads = one_micro(params, t, l)
+                gacc = jax.tree.map(lambda a, g: a + g.astype(acc_dtype),
+                                    gacc, grads)
+                return (loss_acc + loss, FaultReport.merge(rep_acc, rep),
+                        gacc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype),
+                              params)
+            (loss, rep, grads), _ = jax.lax.scan(
+                scan_fn, (jnp.zeros((), F32), FaultReport.clean(), g0),
+                (tk, lb))
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, rep, grads = one_micro(params, tokens, labels)
+
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        lr = lr_fn(state["step"])
+        new_params, new_opt = apply_updates(params, grads, state["opt"],
+                                            opt_cfg, lr)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, "gnorm": gnorm, "lr": lr, "report": rep}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, batch):
+        logits, rep, caches = M.prefill(params, batch["tokens"], cfg, max_len)
+        return {"logits": logits, "report": rep, "caches": caches}
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, greedy: bool = True):
+    """One decode step: returns sampled tokens, updated caches, report."""
+    def serve_step(params, batch):
+        logits, rep, caches = M.decode_step(
+            params, batch["tokens"], batch["caches"], batch["positions"], cfg)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return {"next_tokens": nxt, "logits": logits, "report": rep,
+                "caches": caches,
+                "positions": batch["positions"] + 1}
+    return serve_step

@@ -1,0 +1,6 @@
+"""Model layers, all weight GEMMs routed through the ABFT core."""
+from . import (attention, embedding, ffn, linear, moe, norms, rglru, rotary,
+               ssm)
+
+__all__ = ["attention", "embedding", "ffn", "linear", "moe", "norms",
+           "rglru", "rotary", "ssm"]

@@ -1,0 +1,170 @@
+"""GQA attention: full / sliding-window / gemma2 local-global / llama4
+chunked (iRoPE) variants, with ABFT-protected projections, RoPE, optional
+QK-norm and attention-logit softcapping.
+
+The score x value core is computed in q-blocks (lax.map) so the live score
+buffer is (B, H, q_block, S_kv) instead of (B, H, S, S) - this is what
+makes the 32k-prefill shapes fit per-device HBM. Decode attends one query
+row against the cache (per-request positions supported).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FaultReport, ProtectConfig
+from .linear import apply_dense, init_dense
+from .norms import rms_norm, softcap
+from .rotary import apply_rope, rope_tables
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, dtype=jnp.bfloat16) -> Dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(kq, d, cfg.num_heads * hd, dtype=dtype),
+        "wk": init_dense(kk, d, cfg.num_kv_heads * hd, dtype=dtype),
+        "wv": init_dense(kv, d, cfg.num_kv_heads * hd, dtype=dtype),
+        "wo": init_dense(ko, cfg.num_heads * hd, d, dtype=dtype,
+                         scale=(cfg.num_heads * hd) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _mask(kind: str, q_pos, kv_pos, window: int, chunk: int):
+    """q_pos: (B, Sq) or (1, Sq); kv_pos: (Skv,) -> (B, Sq, Skv) bool."""
+    q = q_pos[..., None].astype(jnp.int32)
+    k = kv_pos[None, None, :].astype(jnp.int32)
+    m = k <= q  # causal
+    if kind in ("attn_swa", "attn_local"):
+        m &= (q - k) < window
+    elif kind == "attn_chunk":
+        m &= (q // chunk) == (k // chunk)
+    return m
+
+
+def _attn_core(q, k, v, q_pos, kv_pos, *, kind, window, chunk,
+               attn_cap: float, q_block: int = 0,
+               exact_cost: bool = False):
+    """q: (B,Sq,Hkv,G,hd); k/v: (B,Skv,Hkv,hd) -> (B,Sq,Hkv,G,hd).
+
+    exact_cost disables q-blocking: the lax.map over blocks lowers to a
+    while loop whose body XLA's cost_analysis counts once, so the dry-run
+    costing compiles run the (numerically identical) unblocked form."""
+    from repro.core.protected import pick_chunk
+    b, sq, hkv, g, hd = q.shape
+    skv = k.shape[1]
+    scale = hd ** -0.5
+    if exact_cost:
+        q_block = sq
+    elif not q_block:
+        # bound the live (global) score buffer to ~4 GiB - with the batch
+        # axis DP-sharded 16+ ways that is <=256 MiB per device
+        q_block = max(16, min(512, (1 << 32) // max(b * hkv * g * skv * 4,
+                                                    1)))
+    qb = pick_chunk(sq, min(q_block, sq))
+    nb = sq // qb
+
+    def one_block(args):
+        qblk, qpos_blk = args          # (B, qb, Hkv, G, hd), (B|1, qb)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qblk.astype(F32),
+                       k.astype(F32)) * scale
+        if attn_cap:
+            s = attn_cap * jnp.tanh(s / attn_cap)
+        m = _mask(kind, qpos_blk, kv_pos, window, chunk)   # (B|1, qb, Skv)
+        s = jnp.where(m[:, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(F32))
+
+    if nb == 1:
+        out = one_block((q, q_pos))
+    else:
+        qs = q.reshape(b, nb, qb, hkv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+        qp = jnp.broadcast_to(q_pos, (q.shape[0] if q_pos.shape[0] > 1 else 1,
+                                      sq))
+        qp = qp.reshape(qp.shape[0], nb, qb).transpose(1, 0, 2)
+        out = jax.lax.map(one_block, (qs, qp))
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, hkv, g, hd)
+    return out.astype(q.dtype)
+
+
+def apply_attention(
+    params: Dict,
+    x: jnp.ndarray,                    # (B, S, d)
+    *,
+    kind: str,
+    cfg,                               # ModelConfig
+    abft: Optional[ProtectConfig],
+    positions: jnp.ndarray,            # (B, S) or (1, S)
+    cache: Optional[Dict] = None,      # {"k","v": (B, L, Hkv, hd)}
+    cache_pos: Optional[jnp.ndarray] = None,  # scalar write position
+) -> Tuple[jnp.ndarray, FaultReport, Optional[Dict]]:
+    b, s, d = x.shape
+    hd, hq, hkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    g = cfg.q_per_kv
+
+    q, r1 = apply_dense(params["wq"], x, abft)
+    k, r2 = apply_dense(params["wk"], x, abft)
+    v, r3 = apply_dense(params["wv"], x, abft)
+    rep = FaultReport.merge(FaultReport.merge(r1, r2), r3)
+
+    q = q.reshape(b, s, hq, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+
+    sin, cos = rope_tables(positions, hd, cfg.rope_theta)      # (B|1, S, hd/2)
+    sin_b = jnp.broadcast_to(sin, (b, s, hd // 2))
+    cos_b = jnp.broadcast_to(cos, (b, s, hd // 2))
+    q = apply_rope(q, sin_b, cos_b)
+    k = apply_rope(k, sin_b, cos_b)
+
+    if cache is not None:
+        # synchronized-batch write at a scalar position: a batch-0 start
+        # keeps the DUS local under batch sharding (per-request ragged
+        # positions would force a cache gather; continuous batching would
+        # use a one-hot masked update instead - see DESIGN.md)
+        zero = jnp.zeros((), jnp.int32)
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype),
+            (zero, cache_pos.astype(jnp.int32), zero, zero))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype),
+            (zero, cache_pos.astype(jnp.int32), zero, zero))
+        kv_pos = jnp.arange(ck.shape[1], dtype=jnp.int32)
+        out = _attn_core(q.reshape(b, s, hkv, g, hd), ck, cv,
+                         positions, kv_pos, kind=kind,
+                         window=cfg.window_size, chunk=cfg.attn_chunk,
+                         attn_cap=cfg.attn_softcap,
+                         exact_cost=not cfg.scan_stages)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        kv_pos = positions[0] if positions.shape[0] == 1 else \
+            jnp.arange(s, dtype=jnp.int32)
+        out = _attn_core(q.reshape(b, s, hkv, g, hd), k, v,
+                         positions, kv_pos, kind=kind,
+                         window=cfg.window_size, chunk=cfg.attn_chunk,
+                         attn_cap=cfg.attn_softcap,
+                         exact_cost=not cfg.scan_stages)
+        new_cache = None
+
+    out = out.reshape(b, s, hq * hd)
+    y, r4 = apply_dense(params["wo"], out, abft)
+    return y, FaultReport.merge(rep, r4), new_cache
+
+
+def init_cache(cfg, kind: str, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Full-length cache (ring-buffer windows are a perf iteration, see
+    EXPERIMENTS.md SSPerf)."""
+    shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

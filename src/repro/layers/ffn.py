@@ -1,0 +1,31 @@
+"""Gated-linear-unit FFN (SwiGLU/GeGLU), ABFT-protected."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FaultReport, ProtectConfig
+from .linear import apply_dense, init_dense
+from .norms import activate
+
+
+def init_ffn(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Dict:
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "gate": init_dense(kg, d_model, d_ff, dtype=dtype),
+        "up": init_dense(ku, d_model, d_ff, dtype=dtype),
+        "down": init_dense(kd, d_ff, d_model, dtype=dtype,
+                           scale=d_ff ** -0.5),
+    }
+
+
+def apply_ffn(params: Dict, x: jnp.ndarray, abft: ProtectConfig,
+              act: str = "silu") -> Tuple[jnp.ndarray, FaultReport]:
+    g, r1 = apply_dense(params["gate"], x, abft)
+    u, r2 = apply_dense(params["up"], x, abft)
+    h = activate(g, act) * u
+    y, r3 = apply_dense(params["down"], h, abft)
+    rep = FaultReport.merge(FaultReport.merge(r1, r2), r3)
+    return y, rep

@@ -1,0 +1,32 @@
+"""Normalisation + activation helpers (fp32 internals, cast back)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6,
+             offset: float = 0.0) -> jnp.ndarray:
+    x32 = x.astype(F32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * (offset + scale.astype(F32))
+    return y.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(F32) / cap)).astype(x.dtype)
+
+
+def activate(x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "silu":
+        return jax.nn.silu(x)
+    if act == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if act == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(act)

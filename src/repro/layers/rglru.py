@@ -1,0 +1,103 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Recurrence: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t), with
+a_t = exp(-c * softplus(Lambda) * r_t), r_t/i_t input-dependent gates.
+Training/prefill uses jax.lax.associative_scan (log-depth on TPU); decode
+is the O(1) single-step update. Projections are ABFT-protected; the
+elementwise data-dependent recurrence has no weight-stationary checksum
+invariant (DESIGN.md SSArch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FaultReport, ProtectConfig
+from .linear import apply_dense, init_dense
+from .norms import activate
+from .ssm import _causal_conv
+
+F32 = jnp.float32
+_C = 8.0  # Griffin's fixed temperature
+
+
+def init_rglru(key, cfg, dtype=jnp.bfloat16) -> Dict:
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "in_x": init_dense(k1, d, w, dtype=dtype),
+        "in_gate": init_dense(k2, d, w, dtype=dtype),
+        "conv_w": (jax.random.normal(k3, (cfg.conv_kernel, w), F32)
+                   * cfg.conv_kernel ** -0.5).astype(dtype),
+        # Lambda init so a^c in [0.9, 0.999] (Griffin SS2.4)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)).astype(F32),
+        "gate_a": init_dense(k4, w, w, dtype=dtype),
+        "gate_i": init_dense(k5, w, w, dtype=dtype),
+        "out": init_dense(k6, w, d, dtype=dtype, scale=w ** -0.5),
+    }
+
+
+def _scan_recurrence(a: jnp.ndarray, bx: jnp.ndarray,
+                     h0: Optional[jnp.ndarray]):
+    """h_t = a_t * h_{t-1} + bx_t over axis 1 via associative scan."""
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0.astype(F32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def apply_rglru(params: Dict, x: jnp.ndarray, cfg, abft: ProtectConfig,
+                state: Optional[Dict] = None
+                ) -> Tuple[jnp.ndarray, FaultReport, Optional[Dict]]:
+    b, s, d = x.shape
+    w = cfg.lru_width or cfg.d_model
+
+    xb, r1 = apply_dense(params["in_x"], x, abft)
+    gb, r2 = apply_dense(params["in_gate"], x, abft)
+    rep = FaultReport.merge(r1, r2)
+
+    tail = state["conv"] if state is not None else None
+    xc, new_tail = _causal_conv(xb, params["conv_w"], tail)
+
+    ra, r3 = apply_dense(params["gate_a"], xc, abft)
+    ri, r4 = apply_dense(params["gate_i"], xc, abft)
+    rep = FaultReport.merge(FaultReport.merge(rep, r3), r4)
+
+    r_t = jax.nn.sigmoid(ra.astype(F32))
+    i_t = jax.nn.sigmoid(ri.astype(F32))
+    log_a = -_C * jax.nn.softplus(params["lam"])[None, None, :] * r_t
+    a_t = jnp.exp(log_a)
+    gated = i_t * xc.astype(F32)
+    bx = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    if state is None or s > 1:
+        h0 = state["h"] if state is not None else None
+        h = _scan_recurrence(a_t, bx, h0)
+    else:
+        hprev = state["h"].astype(F32)
+        h = (a_t[:, 0] * hprev + bx[:, 0])[:, None]
+    h_last = h[:, -1]
+
+    y = h.astype(x.dtype) * activate(gb, "gelu")
+    out, r5 = apply_dense(params["out"], y, abft)
+    rep = FaultReport.merge(rep, r5)
+
+    new_state = None
+    if state is not None:
+        new_state = {"h": h_last.astype(state["h"].dtype), "conv": new_tail}
+    return out, rep, new_state
+
+
+def init_rglru_state(cfg, batch: int, dtype=jnp.float32) -> Dict:
+    w = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), dtype),
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, w), jnp.bfloat16)}

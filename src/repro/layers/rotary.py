@@ -1,0 +1,30 @@
+"""Rotary position embeddings (RoPE), decode-offset aware."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def rope_tables(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions: (...,) int -> (sin, cos) of shape (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=F32) / half))
+    ang = positions.astype(F32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray):
+    """x: (B, S, H, D); sin/cos: (S, D/2) or (B, S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if sin.ndim == 2:
+        sin = sin[None, :, None, :]
+        cos = cos[None, :, None, :]
+    else:
+        sin = sin[:, :, None, :]
+        cos = cos[:, :, None, :]
+    x32_1, x32_2 = x1.astype(F32), x2.astype(F32)
+    out = jnp.concatenate(
+        [x32_1 * cos - x32_2 * sin, x32_2 * cos + x32_1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,190 @@
+"""Mamba-2 (SSD, state-space duality) block.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+computation inside chunks of length Q plus a sequential inter-chunk state
+recurrence (lax.scan over S/Q steps, state (B, H, P, N)). Decode is the
+O(1) per-step recurrence - the reason this arch runs the long_500k cell.
+
+The in/out projections (the dominant FLOPs) are ABFT-protected. The scan
+itself is a data-dependent recurrence with no weight-stationary linear
+invariant - DESIGN.md SSArch-applicability - and is covered by the
+step-level NaN guard + recompute.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FaultReport, ProtectConfig
+from .linear import apply_dense, init_dense
+from .norms import rms_norm
+
+F32 = jnp.float32
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    return d_inner, nheads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_ssm(key, cfg, dtype=jnp.bfloat16) -> Dict:
+    d = cfg.d_model
+    d_inner, h, p, n = _dims(cfg)
+    # in_proj packs [z (gate), x, B, C, dt]
+    d_in_proj = 2 * d_inner + 2 * n + h
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": init_dense(k1, d, d_in_proj, dtype=dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.conv_kernel,
+                                          d_inner + 2 * n), F32)
+                   * cfg.conv_kernel ** -0.5).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(F32),
+        "D": jnp.ones((h,), F32),
+        "dt_bias": jnp.zeros((h,), F32),
+        "norm": jnp.ones((d_inner,), dtype),
+        "out_proj": init_dense(k3, d_inner, d, dtype=dtype,
+                               scale=d_inner ** -0.5),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 tail: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d. x: (B, S, C); w: (K, C); tail: (B, K-1, C)
+    carries state across decode steps. Returns (y, new_tail)."""
+    k = w.shape[0]
+    pad = tail if tail is not None else jnp.zeros(
+        (x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(k))
+    new_tail = xp[:, -(k - 1):, :] if k > 1 else pad
+    return y, new_tail
+
+
+def _segsum(x):
+    """Stable segment-sum: out[i,j] = sum_{j<k<=i} x[k] (lower-tri)."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _ssd_chunked(xh, dt, a, bmat, cmat, chunk: int, h0=None):
+    """SSD forward. xh: (B,S,H,P); dt: (B,S,H); a: (H,) = -exp(A_log);
+    bmat/cmat: (B,S,N). Returns (y (B,S,H,P), h_last (B,H,P,N))."""
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    nc = s // q
+    assert s % q == 0, (s, q)
+
+    da = dt * a[None, None, :]                         # (B,S,H)
+    xr = xh.reshape(b, nc, q, h, p)
+    dtr = dt.reshape(b, nc, q, h)
+    dar = da.reshape(b, nc, q, h)
+    br = bmat.reshape(b, nc, q, n)
+    cr = cmat.reshape(b, nc, q, n)
+
+    # intra-chunk (diagonal block) output
+    l = jnp.exp(_segsum(dar.transpose(0, 1, 3, 2)))    # (B,NC,H,Q,Q)
+    att = jnp.einsum("bcqn,bckn,bchqk,bckh->bchqk", cr, br, l, dtr)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", att, xr)
+
+    # chunk-final states
+    da_cum = jnp.cumsum(dar, axis=2)                   # (B,NC,Q,H)
+    decay = jnp.exp(da_cum[:, :, -1:, :] - da_cum)     # (B,NC,Q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqh,bcqhp->bchpn",
+                        br, decay, dtr, xr)            # (B,NC,H,P,N)
+
+    # inter-chunk recurrence (sequential over chunks)
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])         # (B,NC,H)
+    h_init = jnp.zeros((b, h, p, n), F32) if h0 is None else h0.astype(F32)
+
+    def step(hprev, inputs):
+        st, cd = inputs                                # (B,H,P,N), (B,H)
+        hnew = hprev * cd[..., None, None] + st
+        return hnew, hprev
+
+    hlast, hprevs = jax.lax.scan(
+        step, h_init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)           # (B,NC,H,P,N)
+
+    # contribution of the carried-in state to each position
+    state_decay = jnp.exp(da_cum)                      # (B,NC,Q,H)
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", cr, state_decay, hprevs)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, hlast
+
+
+def apply_ssm(params: Dict, x: jnp.ndarray, cfg, abft: ProtectConfig,
+              state: Optional[Dict] = None
+              ) -> Tuple[jnp.ndarray, FaultReport, Optional[Dict]]:
+    """state = {"h": (B,H,P,N), "conv": (B,K-1,C)} for decode; None = train."""
+    b, s, d = x.shape
+    d_inner, h, p, n = _dims(cfg)
+
+    zxbcdt, rep = apply_dense(params["in_proj"], x, abft)
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    dt = jax.nn.softplus(dt.astype(F32) + params["dt_bias"])      # (B,S,H)
+    a = -jnp.exp(params["A_log"])                                  # (H,)
+
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    tail = state["conv"] if state is not None else None
+    conv_out, new_tail = _causal_conv(conv_in, params["conv_w"], tail)
+    conv_out = jax.nn.silu(conv_out.astype(F32))
+    xc = conv_out[..., :d_inner].reshape(b, s, h, p)
+    bc = conv_out[..., d_inner:d_inner + n]
+    cc = conv_out[..., d_inner + n:]
+
+    if state is None or s > 1:
+        # pad to a chunk multiple; padded steps have dt=0 => exp(dt*a)=1 and
+        # zero input contribution, so the state recurrence is unaffected.
+        q = min(cfg.ssm_chunk, s)
+        pad = (-s) % q
+        if pad:
+            pz = lambda t: jnp.pad(t, [(0, 0), (0, pad)] +
+                                   [(0, 0)] * (t.ndim - 2))
+            xc_, dt_, bc_, cc_ = pz(xc), pz(dt), pz(bc), pz(cc)
+        else:
+            xc_, dt_, bc_, cc_ = xc, dt, bc, cc
+        y, hlast = _ssd_chunked(xc_, dt_, a, bc_, cc_, q,
+                                h0=None if state is None else state["h"])
+        y = y[:, :s]
+    else:
+        # single-step decode recurrence
+        dab = jnp.exp(dt[:, 0, :] * a[None, :])                    # (B,H)
+        hprev = state["h"].astype(F32)
+        hnew = (hprev * dab[..., None, None]
+                + jnp.einsum("bn,bh,bhp->bhpn", bc[:, 0], dt[:, 0],
+                             xc[:, 0].astype(F32)))
+        y = jnp.einsum("bn,bhpn->bhp", cc[:, 0], hnew)[:, None]   # (B,1,H,P)
+        hlast = hnew
+
+    y = y + xc.astype(F32) * params["D"][None, None, :, None]
+    y = y.reshape(b, s, d_inner)
+    y = y * jax.nn.silu(z.astype(F32))
+    y = rms_norm(y.astype(x.dtype), params["norm"], cfg.norm_eps)
+    out, r2 = apply_dense(params["out_proj"], y, abft)
+    rep = FaultReport.merge(rep, r2)
+
+    new_state = None
+    if state is not None:
+        new_state = {"h": hlast.astype(state["h"].dtype), "conv": new_tail}
+    return out, rep, new_state
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.float32) -> Dict:
+    d_inner, h, p, n = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, h, p, n), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, d_inner + 2 * n),
+                          jnp.bfloat16),
+    }

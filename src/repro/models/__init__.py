@@ -1,0 +1,5 @@
+"""Model assemblies: decoder LMs (the 10 assigned archs) and the paper's
+four CNNs."""
+from . import cnn, transformer
+
+__all__ = ["cnn", "transformer"]

@@ -1,0 +1,186 @@
+"""The paper's four CNNs - AlexNet, VGG-19, ResNet-18, YOLOv2 (Darknet-19
+backbone) - built on the protected convolution, with per-layer scheme
+policy (paper SS4.3) and fault-report aggregation.
+
+These are the FT-Caffe reproduction targets: the benchmarks measure the
+overhead figures of Fig. 6 / Fig. 10 / Table 6 on them. Configs are
+scalable so the CPU-only container runs reduced widths while keeping every
+layer shape ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (DEFAULT_CONFIG, FaultReport, ProtectConfig,
+                        protected_conv)
+from repro.core.policy import OpShape, decide_rc_clc
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    out_ch: int
+    kernel: int
+    stride: int = 1
+    pad: int = 0
+    pool: int = 0          # maxpool after conv (kernel=stride=pool)
+    residual_from: int = -1  # resnet shortcut source (layer idx)
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    convs: Tuple[ConvSpec, ...]
+    in_ch: int = 3
+    img: int = 224
+    num_classes: int = 1000
+    width_scale: float = 1.0
+    abft: bool = True
+
+    def scaled(self, c: int) -> int:
+        return max(int(round(c * self.width_scale)), 4)
+
+
+def alexnet(scale: float = 1.0) -> CNNConfig:
+    return CNNConfig("alexnet", (
+        ConvSpec(96, 11, 4, 2, pool=2), ConvSpec(256, 5, 1, 2, pool=2),
+        ConvSpec(384, 3, 1, 1), ConvSpec(384, 3, 1, 1),
+        ConvSpec(256, 3, 1, 1, pool=2)), width_scale=scale)
+
+
+def vgg19(scale: float = 1.0) -> CNNConfig:
+    spec: List[ConvSpec] = []
+    for ch, reps in ((64, 2), (128, 2), (256, 4), (512, 4), (512, 4)):
+        for i in range(reps):
+            spec.append(ConvSpec(ch, 3, 1, 1, pool=2 if i == reps - 1 else 0))
+    return CNNConfig("vgg19", tuple(spec), width_scale=scale)
+
+
+def resnet18(scale: float = 1.0) -> CNNConfig:
+    spec: List[ConvSpec] = [ConvSpec(64, 7, 2, 3, pool=2)]
+    idx = 0
+    for stage_i, ch in enumerate((64, 128, 256, 512)):
+        for block in range(2):
+            stride = 2 if (stage_i > 0 and block == 0) else 1
+            spec.append(ConvSpec(ch, 3, stride, 1))
+            spec.append(ConvSpec(ch, 3, 1, 1,
+                                 residual_from=len(spec) - 2))
+    return CNNConfig("resnet18", tuple(spec), width_scale=scale)
+
+
+def yolov2(scale: float = 1.0) -> CNNConfig:
+    """Darknet-19 backbone (YOLOv2's conv layers)."""
+    spec = [ConvSpec(32, 3, 1, 1, pool=2), ConvSpec(64, 3, 1, 1, pool=2),
+            ConvSpec(128, 3, 1, 1), ConvSpec(64, 1), ConvSpec(128, 3, 1, 1, pool=2),
+            ConvSpec(256, 3, 1, 1), ConvSpec(128, 1), ConvSpec(256, 3, 1, 1, pool=2),
+            ConvSpec(512, 3, 1, 1), ConvSpec(256, 1), ConvSpec(512, 3, 1, 1),
+            ConvSpec(256, 1), ConvSpec(512, 3, 1, 1, pool=2),
+            ConvSpec(1024, 3, 1, 1), ConvSpec(512, 1), ConvSpec(1024, 3, 1, 1),
+            ConvSpec(512, 1), ConvSpec(1024, 3, 1, 1)]
+    return CNNConfig("yolov2", tuple(spec), img=416, width_scale=scale)
+
+
+CNN_REGISTRY = {"alexnet": alexnet, "vgg19": vgg19, "resnet18": resnet18,
+                "yolov2": yolov2}
+
+
+# --------------------------------------------------------------------------
+
+def init_cnn(key, cfg: CNNConfig, dtype=jnp.float32) -> Dict:
+    params: Dict[str, Any] = {}
+    ch = cfg.in_ch
+    keys = jax.random.split(key, len(cfg.convs) + 1)
+    for i, spec in enumerate(cfg.convs):
+        out = cfg.scaled(spec.out_ch)
+        fan_in = ch * spec.kernel ** 2
+        params[f"conv{i}"] = {
+            "w": (jax.random.normal(keys[i], (out, ch, spec.kernel,
+                                              spec.kernel), F32)
+                  * (2.0 / fan_in) ** 0.5).astype(dtype),
+            "b": jnp.zeros((out,), dtype),
+        }
+        ch = out
+    params["fc"] = {
+        "w": (jax.random.normal(keys[-1], (ch, cfg.num_classes), F32)
+              * ch ** -0.5).astype(dtype),
+        "b": jnp.zeros((cfg.num_classes,), dtype)}
+    return params
+
+
+def layer_policies(cfg: CNNConfig, batch: int) -> List[ProtectConfig]:
+    """Per-layer RC/ClC enablement from the paper's SS4.3 cost model."""
+    out: List[ProtectConfig] = []
+    img = cfg.img
+    ch = cfg.in_ch
+    for spec in cfg.convs:
+        e = (img + 2 * spec.pad - spec.kernel) // spec.stride + 1
+        shape = OpShape(n=batch, m=cfg.scaled(spec.out_ch), ch=ch,
+                        r=spec.kernel, h=e)
+        rc, clc = decide_rc_clc(shape)
+        out.append(DEFAULT_CONFIG.replace(rc_enabled=rc, clc_enabled=clc))
+        img = e // spec.pool if spec.pool else e
+        ch = cfg.scaled(spec.out_ch)
+    return out
+
+
+def _maxpool(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 1, k, k), (1, 1, k, k), "VALID")
+
+
+def forward_cnn(params: Dict, x: jnp.ndarray, cfg: CNNConfig,
+                policies: Optional[Sequence[ProtectConfig]] = None,
+                inject_layer: int = -1, inject_o=None
+                ) -> Tuple[jnp.ndarray, FaultReport]:
+    """x: (N, C, H, W) -> (logits, merged report).
+
+    inject_layer/inject_o: test hook - replaces layer i's conv output with a
+    corrupted tensor before protection (the paper's per-layer injection)."""
+    rep = FaultReport.clean()
+    feats = []
+    for i, spec in enumerate(cfg.convs):
+        pcfg = (policies[i] if policies is not None else
+                (DEFAULT_CONFIG if cfg.abft else
+                 DEFAULT_CONFIG.replace(enabled=False)))
+        pad = [(spec.pad, spec.pad)] * 2
+        o = inject_o if i == inject_layer else None
+        y, r = protected_conv(x, params[f"conv{i}"]["w"],
+                              bias=params[f"conv{i}"]["b"],
+                              stride=spec.stride, padding=pad, cfg=pcfg, o=o)
+        rep = FaultReport.merge(rep, r)
+        if spec.residual_from >= 0:
+            short = feats[spec.residual_from]
+            if short.shape == y.shape:
+                y = y + short
+        y = jax.nn.relu(y)
+        if spec.pool:
+            y = _maxpool(y, spec.pool)
+        feats.append(y)
+        x = y
+    x = jnp.mean(x, axis=(2, 3))                     # global average pool
+    logits = x @ params["fc"]["w"] + params["fc"]["b"]
+    return logits, rep
+
+
+def conv_output_at(params: Dict, x: jnp.ndarray, cfg: CNNConfig,
+                   layer: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(input_to_layer, clean_conv_output_of_layer) for injection tests."""
+    from repro.core.checksums import conv2d
+    for i, spec in enumerate(cfg.convs):
+        pad = [(spec.pad, spec.pad)] * 2
+        o = conv2d(x, params[f"conv{i}"]["w"], stride=spec.stride,
+                   padding=pad)
+        o = (o.astype(F32)
+             + params[f"conv{i}"]["b"][None, :, None, None]).astype(o.dtype)
+        if i == layer:
+            return x, o
+        y = jax.nn.relu(o)
+        if spec.pool:
+            y = _maxpool(y, spec.pool)
+        x = y
+    raise ValueError(layer)

@@ -1,0 +1,327 @@
+"""Decoder-LM assembler: builds any of the assigned architectures from a
+ModelConfig (dense GQA / MoE / SSD / RG-LRU hybrid / multi-codebook audio),
+with scan-over-stages + remat for O(stage) HLO size, ABFT protection on
+every weight GEMM, and a unified train / prefill / decode interface.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FaultReport, ProtectConfig
+from repro.layers.attention import apply_attention, init_attention, init_cache
+from repro.layers.embedding import embed, init_embedding, logits_head
+from repro.layers.ffn import apply_ffn, init_ffn
+from repro.layers.moe import apply_moe, init_moe
+from repro.layers.norms import rms_norm, softcap
+from repro.layers.rglru import apply_rglru, init_rglru, init_rglru_state
+from repro.layers.ssm import apply_ssm, init_ssm, init_ssm_state
+
+F32 = jnp.float32
+
+ATTN_KINDS = ("attn_full", "attn_swa", "attn_local", "attn_global",
+              "attn_chunk")
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def abft_config(cfg) -> Optional[ProtectConfig]:
+    if not cfg.abft:
+        return None
+    return ProtectConfig(row_chunk=cfg.abft_row_chunk,
+                         col_chunk=cfg.abft_col_chunk,
+                         detect_only=cfg.abft_detect_only)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_block(kind: str, key, cfg) -> Dict:
+    dt = _dtype(cfg)
+    kn, kb = jax.random.split(key)
+    p: Dict[str, Any] = {"norm": jnp.ones((cfg.d_model,), dt)}
+    if cfg.use_post_norm:
+        p["post_norm"] = jnp.ones((cfg.d_model,), dt)
+    if kind in ATTN_KINDS:
+        p["attn"] = init_attention(kb, cfg, dt)
+    elif kind == "ffn":
+        p["ffn"] = init_ffn(kb, cfg.d_model, cfg.d_ff, dt)
+    elif kind == "moe":
+        p["moe"] = init_moe(kb, cfg, dt)
+    elif kind == "ssm":
+        p["ssm"] = init_ssm(kb, cfg, dt)
+    elif kind == "rec":
+        p["rec"] = init_rglru(kb, cfg, dt)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _init_blocks(keys, pattern, cfg):
+    return {f"b{i}_{kind}": _init_block(kind, k, cfg)
+            for i, (kind, k) in enumerate(zip(pattern, keys))}
+
+
+def init_params(key, cfg) -> Dict:
+    pattern, reps, rem = cfg.stages()
+    dt = _dtype(cfg)
+    ke, kp, ks, kr, kf = jax.random.split(key, 5)
+    params: Dict[str, Any] = {"embed": init_embedding(ke, cfg, dt),
+                              "final_norm": jnp.ones((cfg.d_model,), dt)}
+    if cfg.prefix_pattern:
+        params["prefix"] = _init_blocks(
+            jax.random.split(kp, len(cfg.prefix_pattern)),
+            cfg.prefix_pattern, cfg)
+    if reps:
+        def one_stage(k):
+            return _init_blocks(jax.random.split(k, len(pattern)),
+                                pattern, cfg)
+        params["stages"] = jax.vmap(one_stage)(jax.random.split(ks, reps))
+    if rem:
+        params["rem"] = _init_blocks(jax.random.split(kr, len(rem)), rem, cfg)
+    return params
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+
+def _init_block_cache(kind: str, cfg, batch: int, max_len: int, dt):
+    if kind in ATTN_KINDS:
+        return init_cache(cfg, kind, batch, max_len, dt)
+    if kind == "ssm":
+        return init_ssm_state(cfg, batch)
+    if kind == "rec":
+        return init_rglru_state(cfg, batch)
+    return {}
+
+
+def init_caches(cfg, batch: int, max_len: int) -> Dict:
+    dt = _dtype(cfg)
+    pattern, reps, rem = cfg.stages()
+    caches: Dict[str, Any] = {}
+    if cfg.prefix_pattern:
+        caches["prefix"] = {
+            f"b{i}_{kind}": _init_block_cache(kind, cfg, batch, max_len, dt)
+            for i, kind in enumerate(cfg.prefix_pattern)}
+    if reps:
+        one = {f"b{i}_{kind}": _init_block_cache(kind, cfg, batch, max_len, dt)
+               for i, kind in enumerate(pattern)}
+        caches["stages"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (reps,) + x.shape), one)
+    if rem:
+        caches["rem"] = {
+            f"b{i}_{kind}": _init_block_cache(kind, cfg, batch, max_len, dt)
+            for i, kind in enumerate(rem)}
+    return caches
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _apply_block(kind: str, bp: Dict, x, cfg, abft, positions,
+                 cache=None, cache_pos=None):
+    h = rms_norm(x, bp["norm"], cfg.norm_eps)
+    aux = jnp.zeros((), F32)
+    new_cache = cache
+    if kind in ATTN_KINDS:
+        y, rep, new_cache = apply_attention(
+            bp["attn"], h, kind=kind, cfg=cfg, abft=abft,
+            positions=positions, cache=cache, cache_pos=cache_pos)
+    elif kind == "ffn":
+        y, rep = apply_ffn(bp["ffn"], h, abft, cfg.act)
+    elif kind == "moe":
+        y, rep, aux = apply_moe(bp["moe"], h, cfg, abft)
+    elif kind == "ssm":
+        y, rep, new_cache = apply_ssm(bp["ssm"], h, cfg, abft, cache)
+    elif kind == "rec":
+        y, rep, new_cache = apply_rglru(bp["rec"], h, cfg, abft, cache)
+    else:
+        raise ValueError(kind)
+    if cfg.use_post_norm:
+        y = rms_norm(y, bp["post_norm"], cfg.norm_eps)
+    return x + y.astype(x.dtype), rep, new_cache, aux
+
+
+def _apply_blocks(pattern, blocks, x, cfg, abft, positions, caches=None,
+                  cache_pos=None):
+    rep = FaultReport.clean()
+    aux = jnp.zeros((), F32)
+    new_caches = {} if caches is not None else None
+    for i, kind in enumerate(pattern):
+        name = f"b{i}_{kind}"
+        c = caches.get(name) if caches is not None else None
+        c = c if c else None  # {} -> None (stateless block)
+        x, r, nc, a = _apply_block(kind, blocks[name], x, cfg, abft,
+                                   positions, c, cache_pos)
+        rep = FaultReport.merge(rep, r)
+        aux = aux + a
+        if caches is not None:
+            new_caches[name] = nc if nc is not None else {}
+    return x, rep, new_caches, aux
+
+
+def _forward(params, tokens, cfg, *, caches=None, cache_pos=None,
+             positions=None, remat=False):
+    """Shared trunk. tokens: (B, S[, K]). Returns (logits, report, aux,
+    new_caches)."""
+    abft = abft_config(cfg)
+    pattern, reps, rem = cfg.stages()
+    b, s = tokens.shape[:2]
+    x = embed(params["embed"], tokens, cfg)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]     # (1, S)
+
+    rep = FaultReport.clean()
+    aux = jnp.zeros((), F32)
+    new_caches: Dict[str, Any] = {}
+
+    if cfg.prefix_pattern:
+        pc = caches.get("prefix") if caches is not None else None
+        x, r, nc, a = _apply_blocks(cfg.prefix_pattern, params["prefix"], x,
+                                    cfg, abft, positions, pc, cache_pos)
+        rep, aux = FaultReport.merge(rep, r), aux + a
+        if caches is not None:
+            new_caches["prefix"] = nc
+
+    if reps:
+        if not cfg.scan_stages:
+            # unrolled (dry-run costing): python loop over stage index
+            def stage_once(sp, x):
+                x, r, _, a = _apply_blocks(pattern, sp, x, cfg, abft,
+                                           positions, None, None)
+                return x, r, a
+
+            if remat:
+                stage_once = jax.checkpoint(stage_once)
+            ncs_list = []
+            for r_i in range(reps):
+                sp = jax.tree.map(lambda t: t[r_i], params["stages"])
+                if caches is None:
+                    x, r, a = stage_once(sp, x)
+                    nc = None
+                else:
+                    sc = jax.tree.map(lambda t: t[r_i], caches["stages"])
+                    x, r, nc, a = _apply_blocks(pattern, sp, x, cfg, abft,
+                                                positions, sc, cache_pos)
+                rep, aux = FaultReport.merge(rep, r), aux + a
+                if caches is not None:
+                    ncs_list.append(nc)
+            if caches is not None:
+                new_caches["stages"] = jax.tree.map(
+                    lambda *ts: jnp.stack(ts), *ncs_list)
+        elif caches is not None:
+            def stage_fn(carry, xs):
+                x, rep, aux = carry
+                sp, sc = xs
+                x, r, nc, a = _apply_blocks(pattern, sp, x, cfg, abft,
+                                            positions, sc, cache_pos)
+                return (x, FaultReport.merge(rep, r), aux + a), nc
+
+            (x, rep, aux), ncs = jax.lax.scan(
+                stage_fn, (x, rep, aux), (params["stages"], caches["stages"]))
+            new_caches["stages"] = ncs
+        else:
+            def stage_fn_nc(carry, sp):
+                x, rep, aux = carry
+                x, r, _, a = _apply_blocks(pattern, sp, x, cfg, abft,
+                                           positions, None, None)
+                return (x, FaultReport.merge(rep, r), aux + a), None
+
+            if remat:
+                stage_fn_nc = jax.checkpoint(stage_fn_nc)
+            (x, rep, aux), _ = jax.lax.scan(stage_fn_nc, (x, rep, aux),
+                                            params["stages"])
+
+    if rem:
+        rc = caches.get("rem") if caches is not None else None
+        x, r, nc, a = _apply_blocks(rem, params["rem"], x, cfg, abft,
+                                    positions, rc, cache_pos)
+        rep, aux = FaultReport.merge(rep, r), aux + a
+        if caches is not None:
+            new_caches["rem"] = nc
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits, r = logits_head(params["embed"], x, cfg, abft)
+    rep = FaultReport.merge(rep, r)
+    if cfg.logit_softcap:
+        logits = softcap(logits, cfg.logit_softcap)
+    return logits, rep, aux, (new_caches if caches is not None else None)
+
+
+def forward_train(params, tokens, cfg):
+    """tokens: (B, S[, K]) -> logits (B, S, [K,] V), report, aux."""
+    logits, rep, aux, _ = _forward(params, tokens, cfg, remat=cfg.remat)
+    return logits, rep, aux
+
+
+def prefill(params, tokens, cfg, max_len: int):
+    """Fill caches for `tokens`; returns (last-position logits, report,
+    caches). Cache buffers sized to max_len."""
+    b, s = tokens.shape[:2]
+    caches = init_caches(cfg, b, max_len)
+    logits, rep, _, caches = _forward(params, tokens, cfg, caches=caches,
+                                      cache_pos=jnp.zeros((), jnp.int32))
+    return logits[:, -1:], rep, caches
+
+
+def decode_step(params, tokens, caches, position, cfg):
+    """One synchronized decode step. tokens: (B, 1[, K]); position: scalar
+    current write position. Returns (logits (B,1,...), report, caches)."""
+    position = jnp.asarray(position, jnp.int32).reshape(())
+    logits, rep, _, caches = _forward(
+        params, tokens, cfg, caches=caches, cache_pos=position,
+        positions=position[None, None])
+    return logits, rep, caches
+
+
+# --------------------------------------------------------------------------
+# parameter accounting (for 6ND roofline terms)
+# --------------------------------------------------------------------------
+
+def _block_params(kind: str, cfg, active_only=False) -> int:
+    d, hd = cfg.d_model, cfg.head_dim
+    if kind in ATTN_KINDS:
+        return d * cfg.num_heads * hd * 2 + d * cfg.num_kv_heads * hd * 2
+    if kind == "ffn":
+        return 3 * d * cfg.d_ff
+    if kind == "moe":
+        ff = cfg.moe_d_ff or cfg.d_ff
+        e = cfg.top_k if active_only else cfg.num_experts
+        n = d * cfg.num_experts + e * 3 * d * ff
+        if cfg.n_shared_experts:
+            n += 3 * d * ff * cfg.n_shared_experts
+        return n
+    if kind == "ssm":
+        di = cfg.ssm_expand * d
+        h = di // cfg.ssm_head_dim
+        n = cfg.ssm_state
+        return d * (2 * di + 2 * n + h) + cfg.conv_kernel * (di + 2 * n) \
+            + di * d + di
+    if kind == "rec":
+        w = cfg.lru_width or d
+        return 2 * d * w + 2 * w * w + cfg.conv_kernel * w + w * d
+    raise ValueError(kind)
+
+
+def count_params(cfg, active_only: bool = False) -> int:
+    pattern, reps, rem = cfg.stages()
+    n = max(cfg.num_codebooks, 1) * cfg.vocab_size * cfg.d_model
+    if not cfg.tie_embeddings:
+        n *= 2
+    for kind in cfg.prefix_pattern:
+        n += _block_params(kind, cfg, active_only)
+    for kind in pattern:
+        n += reps * _block_params(kind, cfg, active_only)
+    for kind in rem:
+        n += _block_params(kind, cfg, active_only)
+    return n

@@ -1,0 +1,7 @@
+from .adamw import (OptConfig, apply_updates, clip_by_global_norm,
+                    cosine_schedule, global_norm, init_opt_state)
+from .compression import allreduce_compressed, compress, decompress
+
+__all__ = ["OptConfig", "apply_updates", "clip_by_global_norm",
+           "cosine_schedule", "global_norm", "init_opt_state",
+           "allreduce_compressed", "compress", "decompress"]

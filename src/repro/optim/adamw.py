@@ -1,0 +1,131 @@
+"""Functional optimizers: AdamW (dtype-configurable states) and Adafactor
+(factored second moment - the fitting choice for the 1T-param MoE cells
+where full AdamW state does not fit 512 x 16 GiB HBM; see EXPERIMENTS.md
+SSDry-run memory notes)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"   # float32 | bfloat16
+    # adafactor
+    factored_min: int = 128        # factor 2D dims >= this
+
+
+def _sdt(cfg):
+    return jnp.bfloat16 if cfg.state_dtype == "bfloat16" else F32
+
+
+def init_opt_state(params, cfg: OptConfig) -> Dict[str, Any]:
+    dt = _sdt(cfg)
+    if cfg.kind == "adamw":
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+    if cfg.kind == "adafactor":
+        def vshape(p):
+            if p.ndim >= 2 and p.shape[-1] >= cfg.factored_min \
+                    and p.shape[-2] >= cfg.factored_min:
+                return {"r": jnp.zeros(p.shape[:-1], dt),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], dt)}
+            return {"v": jnp.zeros(p.shape, dt)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree.map(vshape, params,
+                                  is_leaf=lambda x: isinstance(x, jnp.ndarray))}
+    raise ValueError(cfg.kind)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(F32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale), grads), gn
+
+
+def apply_updates(params, grads, state, cfg: OptConfig, lr: jnp.ndarray
+                  ) -> Tuple[Any, Dict[str, Any]]:
+    """One optimizer step; grads in fp32 (post-clip)."""
+    step = state["step"] + 1
+    if cfg.kind == "adamw":
+        b1, b2 = cfg.b1, cfg.b2
+        bc1 = 1.0 - b1 ** step.astype(F32)
+        bc2 = 1.0 - b2 ** step.astype(F32)
+
+        def upd(p, g, m, v):
+            g = g.astype(F32)
+            m32 = b1 * m.astype(F32) + (1 - b1) * g
+            v32 = b2 * v.astype(F32) + (1 - b2) * g * g
+            u = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+            u = u + cfg.weight_decay * p.astype(F32)
+            newp = p.astype(F32) - lr * u
+            return newp.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        newp = jax.tree.map(lambda t: t[0], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        newm = jax.tree.map(lambda t: t[1], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        newv = jax.tree.map(lambda t: t[2], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        return newp, {"step": step, "m": newm, "v": newv}
+
+    # adafactor (beta1=0 variant)
+    d2 = 1.0 - 1.0 / step.astype(F32) ** 0.8     # beta2 schedule
+
+    def upd(p, g, v):
+        g32 = g.astype(F32)
+        g2 = g32 * g32 + 1e-30
+        if "r" in v:
+            r = d2 * v["r"].astype(F32) + (1 - d2) * jnp.mean(g2, axis=-1)
+            c = d2 * v["c"].astype(F32) + (1 - d2) * jnp.mean(g2, axis=-2)
+            denom = (r[..., None] * c[..., None, :]
+                     / (jnp.mean(r, axis=-1, keepdims=True)[..., None] + 1e-30))
+            u = g32 / (jnp.sqrt(denom) + 1e-30)
+            newv = {"r": r.astype(v["r"].dtype), "c": c.astype(v["c"].dtype)}
+        else:
+            vv = d2 * v["v"].astype(F32) + (1 - d2) * g2
+            u = g32 / (jnp.sqrt(vv) + 1e-30)
+            newv = {"v": vv.astype(v["v"].dtype)}
+        # relative step-size clipping (Adafactor's d=1.0)
+        rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u)
+        newp = p.astype(F32) - lr * (u + cfg.weight_decay * p.astype(F32))
+        return newp.astype(p.dtype), newv
+
+    leaves_p, tdef = jax.tree.flatten(params)
+    leaves_g = tdef.flatten_up_to(grads)
+    leaves_v = tdef.flatten_up_to(state["v"])
+    outs = [upd(p, g, v) for p, g, v in zip(leaves_p, leaves_g, leaves_v)]
+    newp = tdef.unflatten([o[0] for o in outs])
+    newv = tdef.unflatten([o[1] for o in outs])
+    return newp, {"step": step, "v": newv}
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        s = step.astype(F32)
+        warm = base_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return lr

@@ -1,0 +1,3 @@
+from . import elastic, ft, sharding, straggler
+
+__all__ = ["elastic", "ft", "sharding", "straggler"]

@@ -1,0 +1,113 @@
+"""Checksum algebra (paper Eq. 4/5/6): property-based over random shapes,
+dtypes and adversarial value distributions."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import checksums as C
+
+SETTINGS = dict(max_examples=25, deadline=None,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def rand(key, shape, dtype, scale=1.0):
+    x = jax.random.normal(key, shape, jnp.float32) * scale
+    return x.astype(dtype)
+
+
+@hypothesis.given(
+    n=st.integers(2, 33), k=st.integers(1, 40), m=st.integers(2, 37),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1.0, 1e-3, 1e3]))
+@hypothesis.settings(**SETTINGS)
+def test_matmul_checksum_invariants(n, k, m, seed, scale):
+    """C_o1..C_o7 computed from input checksums equal the corresponding
+    output summations (fp32, rounding-level tolerance)."""
+    key = jax.random.PRNGKey(seed)
+    d = rand(key, (n, k), jnp.float32, scale)
+    w = rand(jax.random.fold_in(key, 1), (k, m), jnp.float32, scale)
+    o = d @ w
+    cd1, cd2 = C.encode_d_matmul(d)
+    cw1, cw2 = C.encode_w_matmul(w)
+    cs = C.output_checksums_matmul(d, w, cd1, cd2, cw1, cw2)
+    ss = C.output_sums_matmul(o)
+    tol = 1e-4 * (np.abs(float(cs.c5[0])) + float(jnp.sum(jnp.abs(o))) + 1e-6)
+    np.testing.assert_allclose(cs.c5, ss.s5, atol=tol)
+    np.testing.assert_allclose(cs.c6, ss.s6, atol=tol * n)
+    np.testing.assert_allclose(cs.c7, ss.s7, atol=tol * m)
+    np.testing.assert_allclose(cs.c1[:, 0], ss.s1[:, 0], atol=tol)
+    np.testing.assert_allclose(cs.c2[:, 0], ss.s2[:, 0], atol=tol)
+    np.testing.assert_allclose(cs.c3[:, 0], ss.s3[:, 0], atol=tol * n)
+    np.testing.assert_allclose(cs.c4[:, 0], ss.s4[:, 0], atol=tol * m)
+
+
+@hypothesis.given(
+    n=st.integers(1, 6), ch=st.integers(1, 5), m=st.integers(1, 7),
+    h=st.integers(4, 12), r=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]), seed=st.integers(0, 2**31 - 1))
+@hypothesis.settings(**SETTINGS)
+def test_conv_checksum_invariants(n, ch, m, h, r, stride, seed):
+    """The distributive property of (x) (paper Eq. 4) holds for the real
+    convolution: checksum convs equal output summations."""
+    key = jax.random.PRNGKey(seed)
+    d = rand(key, (n, ch, h, h), jnp.float32)
+    w = rand(jax.random.fold_in(key, 1), (m, ch, r, r), jnp.float32)
+    o = C.conv2d(d, w, stride=stride)
+    cd1, cd2 = C.encode_d_conv(d)
+    cw1, cw2 = C.encode_w_conv(w)
+    cs = C.output_checksums_conv(d, w, cd1, cd2, cw1, cw2, stride=stride)
+    ss = C.output_sums_conv(o)
+    scale = float(jnp.sum(jnp.abs(o))) + 1.0
+    np.testing.assert_allclose(cs.c5, ss.s5, atol=1e-4 * scale)
+    np.testing.assert_allclose(cs.c6, ss.s6, atol=1e-4 * scale * n)
+    np.testing.assert_allclose(cs.c7, ss.s7, atol=1e-4 * scale * m)
+    np.testing.assert_allclose(cs.c1, ss.s1, atol=1e-4 * scale)
+    np.testing.assert_allclose(cs.c2, ss.s2, atol=1e-4 * scale)
+
+
+@hypothesis.given(groups=st.sampled_from([1, 2, 4]),
+                  seed=st.integers(0, 2**31 - 1))
+@hypothesis.settings(**SETTINGS)
+def test_grouped_conv_checksums(groups, seed):
+    """Paper SS5.2: grouped-conv kernel checksums concatenate per group and
+    the output invariants still hold."""
+    key = jax.random.PRNGKey(seed)
+    n, ch, m, h, r = 3, 8, 8, 6, 3
+    d = rand(key, (n, ch, h, h), jnp.float32)
+    w = rand(jax.random.fold_in(key, 1), (m, ch // groups, r, r),
+             jnp.float32)
+    o = C.conv2d(d, w, groups=groups)
+    cd1, cd2 = C.encode_d_conv(d)
+    cw1, cw2 = C.encode_w_conv(w, groups=groups)
+    cs = C.output_checksums_conv(d, w, cd1, cd2, cw1, cw2, groups=groups)
+    ss = C.output_sums_conv(o)
+    scale = float(jnp.sum(jnp.abs(o))) + 1.0
+    np.testing.assert_allclose(cs.c5, ss.s5, atol=1e-4 * scale)
+    np.testing.assert_allclose(cs.c1, ss.s1, atol=1e-4 * scale)
+
+
+def test_distributive_property():
+    """Paper Eq. 4 directly: (D1+D2) (x) W == D1 (x) W + D2 (x) W."""
+    key = jax.random.PRNGKey(0)
+    d1 = rand(key, (1, 4, 8, 8), jnp.float32)
+    d2 = rand(jax.random.fold_in(key, 1), (1, 4, 8, 8), jnp.float32)
+    w = rand(jax.random.fold_in(key, 2), (5, 4, 3, 3), jnp.float32)
+    lhs = C.conv2d(d1 + d2, w)
+    rhs = C.conv2d(d1, w) + C.conv2d(d2, w)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_bf16_no_false_positive(seed):
+    """Error-free detection must not fire in bf16 (threshold contract)."""
+    from repro.core import protect_matmul_output
+    key = jax.random.PRNGKey(seed)
+    d = rand(key, (128, 64), jnp.bfloat16)
+    w = rand(jax.random.fold_in(key, 1), (64, 96), jnp.bfloat16)
+    o = jnp.dot(d, w, preferred_element_type=jnp.float32).astype(jnp.bfloat16)
+    _, rep = protect_matmul_output(d, w, o)
+    assert int(rep.detected) == 0

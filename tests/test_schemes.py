@@ -1,0 +1,165 @@
+"""Scheme-level detect/locate/correct under the paper's injection model
+(SS6.1): up to 100 corrupted elements in one row/column of the output."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import injection as inj
+from repro.core.checksums import conv2d
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _mk(seed, n=96, k=48, m=80, dtype=jnp.float32):
+    key = jax.random.PRNGKey(seed)
+    d = jax.random.normal(key, (n, k), jnp.float32).astype(dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, m),
+                          jnp.float32).astype(dtype)
+    o = jnp.dot(d, w, preferred_element_type=jnp.float32).astype(dtype)
+    return d, w, o
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1),
+                  axis=st.sampled_from([0, 1]))
+@hypothesis.settings(**SETTINGS)
+def test_row_col_fault_corrected(seed, axis):
+    """Row-confined faults -> RC; column-confined -> ClC (or better)."""
+    d, w, o = _mk(seed)
+    p = inj.plan(jax.random.PRNGKey(seed ^ 0x5a5a), *o.shape,
+                 max_elems=30, axis=axis)
+    o_bad = inj.inject_matmul(o, p)
+    if bool(jnp.all(o_bad == o)):
+        return  # degenerate plan (zero row)
+    fixed, rep = core.protect_matmul_output(d, w, o_bad)
+    assert int(rep.detected) == 1
+    assert int(rep.residual) == 0
+    scale = float(jnp.max(jnp.abs(o))) + 1.0
+    np.testing.assert_allclose(np.asarray(fixed), np.asarray(o),
+                               atol=2e-2 * scale)
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+@hypothesis.settings(**SETTINGS)
+def test_single_block_corrected_by_coc(seed):
+    d, w, o = _mk(seed)
+    o_bad = inj.inject_single_block(o, jax.random.PRNGKey(seed))
+    fixed, rep = core.protect_matmul_output(d, w, o_bad)
+    assert int(rep.detected) == 1
+    assert int(rep.corrected_by) in (core.COC, core.RC, core.CLC, core.FC)
+    assert int(rep.residual) == 0
+    scale = float(jnp.max(jnp.abs(o))) + 1.0
+    np.testing.assert_allclose(np.asarray(fixed), np.asarray(o),
+                               atol=1e-2 * scale)
+
+
+def test_scattered_multifault_recovered():
+    """Arbitrary multi-point faults end in a consistent output (recompute
+    fallback per paper SS4.1.1)."""
+    d, w, o = _mk(7)
+    key = jax.random.PRNGKey(3)
+    idx = jax.random.randint(key, (6, 2), 0, min(o.shape))
+    o_bad = o
+    for i in range(6):
+        o_bad = o_bad.at[idx[i, 0], idx[i, 1]].add(1000.0 * (i + 1))
+    fixed, rep = core.protect_matmul_output(d, w, o_bad)
+    assert int(rep.detected) == 1
+    assert int(rep.residual) == 0
+    np.testing.assert_allclose(np.asarray(fixed), np.asarray(o), atol=1e-2)
+
+
+@pytest.mark.parametrize("field", ["c5", "c6", "c7"])
+def test_checksum_corruption_fig3(field):
+    """Paper Fig. 3/5: corrupted checksums must not corrupt a clean O."""
+    d, w, o = _mk(11)
+
+    def tamper(cs):
+        return cs._replace(**{field: getattr(cs, field) + 1e7})
+
+    fixed, rep = core.protect_matmul_output(d, w, o, tamper_checksums=tamper)
+    assert int(rep.detected) == 1
+    assert int(rep.residual) == 0
+    # output unchanged (checksum refresh accepted the clean O)
+    np.testing.assert_array_equal(np.asarray(fixed), np.asarray(o))
+
+
+@pytest.mark.parametrize("rc,clc,fc", [(False, False, True),
+                                       (True, False, False),
+                                       (False, False, False)])
+def test_ladder_configurations(rc, clc, fc):
+    """Any ladder configuration (layerwise RC/ClC decisions, even
+    FC-disabled) must still end residual-free via recompute."""
+    cfg = core.DEFAULT_CONFIG.replace(rc_enabled=rc, clc_enabled=clc,
+                                      fc_enabled=fc)
+    d, w, o = _mk(23)
+    p = inj.plan(jax.random.PRNGKey(5), *o.shape, max_elems=40, axis=0)
+    o_bad = inj.inject_matmul(o, p)
+    fixed, rep = core.protect_matmul_output(d, w, o_bad, cfg=cfg)
+    assert int(rep.detected) == 1
+    assert int(rep.residual) == 0
+    np.testing.assert_allclose(np.asarray(fixed), np.asarray(o), atol=1e-2)
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1),
+                  axis=st.sampled_from([0, 1]))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_conv_block_row_col_faults(seed, axis):
+    """Paper's native conv case: corrupted block row/column of O."""
+    key = jax.random.PRNGKey(seed)
+    d = jax.random.normal(key, (6, 5, 10, 10), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (9, 5, 3, 3),
+                          jnp.float32)
+    o = conv2d(d, w)
+    p = inj.plan(jax.random.PRNGKey(seed ^ 0xbeef), o.shape[0], o.shape[1],
+                 max_elems=100, axis=axis)
+    o_bad = inj.inject_conv(o, p)
+    fixed, rep = core.protected_conv(d, w, o=o_bad)
+    assert int(rep.detected) == 1
+    assert int(rep.residual) == 0
+    scale = float(jnp.max(jnp.abs(o))) + 1.0
+    np.testing.assert_allclose(np.asarray(fixed), np.asarray(o),
+                               atol=2e-2 * scale)
+
+
+def test_conv_bias_and_stride():
+    key = jax.random.PRNGKey(0)
+    d = jax.random.normal(key, (4, 3, 12, 12), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (6, 3, 3, 3),
+                          jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(key, 2), (6,), jnp.float32)
+    o_ref = conv2d(d, w, stride=2) + b[None, :, None, None]
+    # clean: no detection with bias adjustments (paper Table 5)
+    o, rep = core.protected_conv(d, w, bias=b, stride=2)
+    assert int(rep.detected) == 0
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), rtol=1e-5)
+    # injected: corrected
+    o_bad = o_ref.at[1, 2, 1, 1].add(500.0)
+    fixed, rep = core.protected_conv(d, w, bias=b, stride=2, o=o_bad)
+    assert int(rep.detected) == 1 and int(rep.residual) == 0
+    np.testing.assert_allclose(np.asarray(fixed), np.asarray(o_ref),
+                               atol=1e-2)
+
+
+def test_grouped_matmul_protection():
+    key = jax.random.PRNGKey(1)
+    d = jax.random.normal(key, (4, 32, 16))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (4, 16, 24))
+    o, rep = core.protected_grouped_matmul(d, w)
+    assert int(rep.detected) == 0
+    np.testing.assert_allclose(
+        np.asarray(o), np.asarray(jnp.einsum("gnk,gkm->gnm", d, w)),
+        rtol=2e-5, atol=2e-5)
+
+
+def test_nan_fault_recomputed():
+    """Exponent-flip to NaN short-circuits to a clean recompute."""
+    d, w, o = _mk(31)
+    o_bad = o.at[3, 4].set(jnp.nan)
+    fixed, rep = core.protect_matmul_output(d, w, o_bad)
+    assert int(rep.detected) == 1
+    assert int(rep.residual) == 0
+    assert bool(jnp.all(jnp.isfinite(fixed)))
+    np.testing.assert_allclose(np.asarray(fixed), np.asarray(o), atol=1e-3)
