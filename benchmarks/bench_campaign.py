@@ -1,0 +1,47 @@
+"""Paper SS6 / Table 7: detection + correction rates from the vectorized
+injection campaign (repro.campaign).
+
+Two modes:
+- REPRO_CAMPAIGN_JSON=<path>: consume an artifact previously written by
+  `python -m repro.campaign.run --out <path>` and re-emit its cells as
+  benchmark rows (so a long overnight campaign feeds the same CSV
+  pipeline).
+- default: run a reduced in-process campaign (both layers, full scheme,
+  every fault model, 300 trials/cell) and emit the rows directly.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.campaign import CampaignResult, run_campaign
+
+TRIALS = 300
+
+
+def run():
+    path = os.environ.get("REPRO_CAMPAIGN_JSON")
+    if path:
+        result = CampaignResult.load(path)
+        print(f"# campaign artifact {path} "
+              f"({result.meta.get('trials')} trials/cell)")
+        rows = []
+        for c in result.cells:
+            print(c.row(), flush=True)
+            rows.append(c.row())
+        return rows
+    print(f"# in-process campaign, {TRIALS} trials/cell")
+    rows = []
+
+    def _progress(c):
+        print(c.row(), flush=True)
+        rows.append(c.row())
+
+    result = run_campaign(layers=("matmul", "conv"), schemes=("full",),
+                          trials=TRIALS, progress=_progress)
+    residual = sum(c.residual_rate for c in result.cells)
+    assert residual == 0.0, f"campaign left residual faults: {residual}"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

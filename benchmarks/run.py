@@ -12,19 +12,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: schemes,error_free,erroneous,mm_abft,"
-                         "transformer,kernels,parallel,roofline")
+                         "transformer,kernels,parallel,roofline,campaign")
     ap.add_argument("--quick", action="store_true",
-                    help="skip the slow erroneous/parallel suites")
+                    help="skip the slow erroneous/parallel/campaign suites")
     args = ap.parse_args()
 
-    from . import (bench_error_free, bench_erroneous, bench_kernels,
-                   bench_mm_abft, bench_parallel, bench_schemes,
-                   bench_transformer, roofline)
+    from . import (bench_campaign, bench_error_free, bench_erroneous,
+                   bench_kernels, bench_mm_abft, bench_parallel,
+                   bench_schemes, bench_transformer, roofline)
 
     suites = {
         "schemes": bench_schemes.run,            # Fig. 6 / Table 4
         "error_free": bench_error_free.run,      # Fig. 10(a)
         "erroneous": bench_erroneous.run,        # Fig. 10(b)(c) / Fig. 11
+        "campaign": bench_campaign.run,          # SS6 / Table 7 rates
         "mm_abft": bench_mm_abft.run,            # Table 6
         "transformer": bench_transformer.run,    # beyond-paper LLM overhead
         "kernels": bench_kernels.run,            # fused epilogue accounting
@@ -35,7 +36,7 @@ def main() -> None:
         keep = args.only.split(",")
         suites = {k: v for k, v in suites.items() if k in keep}
     elif args.quick:
-        for k in ("erroneous", "parallel"):
+        for k in ("erroneous", "parallel", "campaign"):
             suites.pop(k, None)
 
     print("name,us_per_call,derived")

@@ -1,0 +1,11 @@
+"""Fault-injection campaign subsystem: vectorized trials, differential
+oracles, and the paper's SS6 result tables (see engine.py / report.py)."""
+from .engine import (LAYER_CASES, SCHEME_CONFIGS, TOL_REL, CampaignEngine,
+                     ConvCase, MatmulCase, TrialOutcome, run_campaign)
+from .report import SCHEMA, CampaignResult, CellResult, summarize_cell
+
+__all__ = [
+    "LAYER_CASES", "SCHEME_CONFIGS", "TOL_REL", "CampaignEngine",
+    "ConvCase", "MatmulCase", "TrialOutcome", "run_campaign",
+    "SCHEMA", "CampaignResult", "CellResult", "summarize_cell",
+]

@@ -6,14 +6,20 @@ from .protected import (WeightChecksums, abft_matmul_vjp, pick_chunk,
                         protect_matmul_output, protected_conv,
                         protected_grouped_matmul, protected_matmul,
                         weight_checksums_matmul)
+from .injection import (CONTROL_MODEL, FAULT_MODELS, FaultModel, FaultSpec,
+                        fault_model_names, register_fault_model)
 from .types import (CHECKSUM_REFRESH, CLC, COC, DEFAULT_CONFIG, FC, NONE, RC,
-                    RECOMPUTE, SCHEME_NAMES, FaultReport, ProtectConfig)
+                    RECOMPUTE, SCHEME_NAMES, FaultReport, ProtectConfig,
+                    scheme_histogram)
 
 __all__ = [
     "checksums", "injection", "policy", "schemes", "thresholds",
     "WeightChecksums", "abft_matmul_vjp", "pick_chunk",
     "protect_matmul_output", "protected_conv", "protected_grouped_matmul",
     "protected_matmul", "weight_checksums_matmul",
+    "CONTROL_MODEL", "FAULT_MODELS", "FaultModel", "FaultSpec",
+    "fault_model_names", "register_fault_model",
     "CHECKSUM_REFRESH", "CLC", "COC", "DEFAULT_CONFIG", "FC", "NONE", "RC",
     "RECOMPUTE", "SCHEME_NAMES", "FaultReport", "ProtectConfig",
+    "scheme_histogram",
 ]

@@ -2,22 +2,282 @@
 
 The paper injects at source level: "randomly corrupt up to 100 elements in
 one randomly selected row or column of inputs and output". We reproduce
-that, deterministically from a PRNG key, for both the matmul block view
-(rows/columns of O[N,M]) and the conv block view (block-rows/-columns of
-O[N,M,E,E]).
+that, deterministically from a PRNG key, and generalise it into a pluggable
+*fault-model registry* over the normalised block form O(N, M, P) (P = 1 for
+matmul, E*E for conv):
+
+  name          span                     role
+  ------------  -----------------------  ------------------------------
+  none          nothing                  error-free control arm
+  burst_row     one block-row            paper SS6.1 (axis fixed to rows)
+  burst_col     one block-column         paper SS6.1 (axis fixed to cols)
+  burst         random row or column     paper SS6.1 as written
+  single_flip   one element              CoC's single-fault regime
+  scattered     unconstrained positions  multi-fault / recompute regime
+  subthreshold  one element, tiny delta  negative control: provably below
+                                         the thresholds.py detection floor
+
+Every model is a (plan, apply) pair built from jit/vmap-safe primitives:
+`plan` draws a `FaultSpec` (a fixed-shape pytree of arrays, so thousands of
+plans vmap over PRNG keys) and `apply` materialises the corruption. All
+models share the same FaultSpec structure, so a campaign can `lax.switch`
+over model ids inside one compiled program (see repro.campaign.engine).
 
 Magnitudes emulate high-order bit flips: the corrupted value is scaled by a
 large factor (sign+exponent corruption), the regime ABFT targets - flips
 below the arithmetic's own rounding noise are neither detectable nor
-material (see thresholds.py).
+material (see thresholds.py). The `subthreshold` model deliberately lives
+in that blind spot to measure false positives of the threshold model.
+
+The pre-registry single-shot helpers (`plan`, `inject_matmul`,
+`inject_conv`, `inject_single_block`) are kept verbatim for the examples
+and scheme tests that depend on their exact corruption patterns.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+import math
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# the fault-model registry
+# --------------------------------------------------------------------------
+
+class FaultSpec(NamedTuple):
+    """One planned injection, as fixed-shape arrays (vmappable, switchable).
+
+    `axis` selects the span the offsets index into:
+      0 -> block-row `index`   (span size M*P)
+      1 -> block-column `index`(span size N*P)
+      2 -> unconstrained       (span size N*M*P, `index` unused = -1)
+    Slots >= nelem in `offsets` are ignored. The corruption applied to a
+    selected element x is `x * scale + add` (add also carries the relative
+    magnitude for the data-dependent subthreshold model).
+    """
+    model_id: jnp.ndarray   # i32 registry id (for reporting)
+    axis: jnp.ndarray       # i32 in {0, 1, 2}
+    index: jnp.ndarray      # i32 block row/column (-1 when axis == 2)
+    nelem: jnp.ndarray      # i32 number of active offset slots
+    scale: jnp.ndarray      # f32 multiplicative corruption
+    add: jnp.ndarray        # f32 additive corruption
+    offsets: jnp.ndarray    # (max_elems,) i32 span-local positions
+
+
+class FaultModel(NamedTuple):
+    name: str
+    model_id: int           # stable registration index
+    detectable: bool        # should exceed the thresholds.py floor?
+    plan: Callable[..., FaultSpec]           # (key, n, m, p, max_elems)
+    apply: Callable[[jnp.ndarray, FaultSpec], jnp.ndarray]  # (o3, spec)
+
+
+FAULT_MODELS: Dict[str, FaultModel] = {}
+CONTROL_MODEL = "none"   # the error-free arm every campaign carries
+
+
+def register_fault_model(name: str, detectable: bool = True,
+                         apply: Optional[Callable] = None):
+    """Decorator registering `plan_fn(key, n, m, p, max_elems) -> FaultSpec`
+    under `name`. Ids are assigned in registration order and stay stable
+    within a process (campaigns embed them in compiled programs)."""
+    def deco(plan_fn):
+        if name in FAULT_MODELS:
+            raise ValueError(f"fault model {name!r} already registered")
+        model = FaultModel(name, len(FAULT_MODELS), detectable,
+                           plan_fn, apply or apply_spec)
+        FAULT_MODELS[name] = model
+        return plan_fn
+    return deco
+
+
+def fault_model_names(include_control: bool = False):
+    return [n for n in FAULT_MODELS
+            if include_control or n != CONTROL_MODEL]
+
+
+def _span_offsets(key: jax.Array, span: int, max_elems: int) -> jnp.ndarray:
+    """max_elems distinct positions in [0, span) (wrapping only if the span
+    is smaller than max_elems, where full coverage is the right answer)."""
+    perm = jax.random.permutation(key, jnp.arange(span, dtype=jnp.int32))
+    if span >= max_elems:
+        return perm[:max_elems]
+    reps = math.ceil(max_elems / span)
+    return jnp.tile(perm, reps)[:max_elems]
+
+
+def _exponent_scale(key: jax.Array) -> jnp.ndarray:
+    """Sign + exponent corruption: +-2^e, e in [4, 12]."""
+    k1, k2 = jax.random.split(key)
+    e = jax.random.randint(k1, (), 4, 13).astype(F32)
+    return jnp.where(jax.random.bernoulli(k2), 1.0, -1.0) * 2.0 ** e
+
+
+def _spec(model_id, axis, index, nelem, scale, add, offsets) -> FaultSpec:
+    """Dtype-normalised constructor so every model's spec is switch-
+    compatible (identical pytree structure and dtypes)."""
+    return FaultSpec(jnp.asarray(model_id, jnp.int32),
+                     jnp.asarray(axis, jnp.int32),
+                     jnp.asarray(index, jnp.int32),
+                     jnp.asarray(nelem, jnp.int32),
+                     jnp.asarray(scale, F32),
+                     jnp.asarray(add, F32),
+                     jnp.asarray(offsets, jnp.int32))
+
+
+def spec_positions(spec: FaultSpec, n: int, m: int, p: int) -> jnp.ndarray:
+    """Flat indices into O.reshape(N*M*P) for the active offset slots;
+    inactive slots map to the out-of-bounds sentinel N*M*P."""
+    total = n * m * p
+    slot = jnp.arange(spec.offsets.shape[0])
+    row_pos = spec.index * (m * p) + spec.offsets % (m * p)
+    off_c = spec.offsets % (n * p)
+    col_pos = (off_c // p) * (m * p) + spec.index * p + off_c % p
+    free_pos = spec.offsets % total
+    pos = jnp.where(spec.axis == 0, row_pos,
+                    jnp.where(spec.axis == 1, col_pos, free_pos))
+    return jnp.where(slot < spec.nelem, pos, total)
+
+
+def position_mask(spec: FaultSpec, n: int, m: int, p: int) -> jnp.ndarray:
+    """Boolean mask over O.reshape(N*M*P) of the spec's target elements.
+    The one place the sentinel/drop semantics live - custom apply
+    functions should build their masks here (see examples)."""
+    pos = spec_positions(spec, n, m, p)
+    return jnp.zeros(n * m * p, bool).at[pos].set(True, mode="drop")
+
+
+def apply_spec(o3: jnp.ndarray, spec: FaultSpec) -> jnp.ndarray:
+    """Corrupt O(N, M, P) according to the spec (shared by all models whose
+    corruption is position + affine; data-dependent models override)."""
+    n, m, p = o3.shape
+    mask = position_mask(spec, n, m, p)
+    flat = o3.reshape(-1)
+    corrupted = (flat.astype(F32) * spec.scale + spec.add).astype(o3.dtype)
+    return jnp.where(mask, corrupted, flat).reshape(o3.shape)
+
+
+def inject(o: jnp.ndarray, spec: FaultSpec,
+           model: Optional[FaultModel] = None) -> jnp.ndarray:
+    """Apply a spec to a matmul O[N,M] or conv O[N,M,E,E] output by routing
+    through the normalised (N, M, P) block form."""
+    apply_fn = model.apply if model is not None else apply_spec
+    if o.ndim == 2:
+        return apply_fn(o[:, :, None], spec)[:, :, 0]
+    n, m = o.shape[0], o.shape[1]
+    return apply_fn(o.reshape(n, m, -1), spec).reshape(o.shape)
+
+
+# ---- the registered models ------------------------------------------------
+
+@register_fault_model(CONTROL_MODEL, detectable=False)
+def plan_none(key: jax.Array, n: int, m: int, p: int,
+              max_elems: int = 100) -> FaultSpec:
+    """Error-free control arm: zero active slots, apply is the identity.
+    Detections on this arm are by definition false positives."""
+    del key
+    return _spec(FAULT_MODELS[CONTROL_MODEL].model_id, 2, -1, 0, 1.0, 0.0,
+                 jnp.zeros(max_elems, jnp.int32))
+
+
+def _plan_burst(name: str, key: jax.Array, n: int, m: int, p: int,
+                max_elems: int, axis) -> FaultSpec:
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    ax = (jax.random.bernoulli(k1).astype(jnp.int32)
+          if axis is None else jnp.int32(axis))
+    idx = jax.random.randint(k2, (), 0, jnp.where(ax == 0, n, m))
+    row_span, col_span = m * p, n * p
+    # nelem is drawn uniform over the *selected* span so rectangular
+    # shapes keep the paper's 1..min(max_elems, span) burst distribution
+    hi = jnp.where(ax == 0, min(max_elems, row_span),
+                   min(max_elems, col_span))
+    nelem = jax.random.randint(k3, (), 1, hi + 1)
+    offsets = jnp.where(ax == 0,
+                        _span_offsets(k5, row_span, max_elems),
+                        _span_offsets(k6, col_span, max_elems))
+    return _spec(FAULT_MODELS[name].model_id, ax, idx, nelem,
+                 _exponent_scale(k4), 1.0, offsets)
+
+
+@register_fault_model("burst_row")
+def plan_burst_row(key, n, m, p, max_elems: int = 100) -> FaultSpec:
+    """Up to max_elems corrupted elements confined to one block-row (the
+    paper's SS6.1 protocol with the axis pinned; RC's target regime)."""
+    return _plan_burst("burst_row", key, n, m, p, max_elems, 0)
+
+
+@register_fault_model("burst_col")
+def plan_burst_col(key, n, m, p, max_elems: int = 100) -> FaultSpec:
+    """One corrupted block-column (ClC's target regime)."""
+    return _plan_burst("burst_col", key, n, m, p, max_elems, 1)
+
+
+@register_fault_model("burst")
+def plan_burst(key, n, m, p, max_elems: int = 100) -> FaultSpec:
+    """The paper's SS6.1 model as written: a random row OR column."""
+    return _plan_burst("burst", key, n, m, p, max_elems, None)
+
+
+@register_fault_model("single_flip")
+def plan_single_flip(key, n, m, p, max_elems: int = 100) -> FaultSpec:
+    """Exactly one corrupted element anywhere (CoC's single-fault regime)."""
+    k1, k2 = jax.random.split(key)
+    off = jax.random.randint(k1, (max_elems,), 0, n * m * p)
+    return _spec(FAULT_MODELS["single_flip"].model_id, 2, -1, 1,
+                 _exponent_scale(k2), 1.0, off)
+
+
+@register_fault_model("scattered")
+def plan_scattered(key, n, m, p, max_elems: int = 100) -> FaultSpec:
+    """2..max_elems corrupted elements at unconstrained positions - the
+    multi-fault regime that exercises FC and the recompute fallback."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    span = n * m * p
+    hi = min(max_elems, span)
+    nelem = jax.random.randint(k1, (), min(2, hi), hi + 1)
+    return _spec(FAULT_MODELS["scattered"].model_id, 2, -1, nelem,
+                 _exponent_scale(k2), 1.0,
+                 _span_offsets(k3, span, max_elems))
+
+
+# relative magnitude of the subthreshold delta: tau_scalar's floor is
+# factor * eps_out * ||O||_F (factor defaults to 32), so 0.25 * eps *
+# ||O||_F sits 128x below the default threshold - yet it is ~sqrt(N*M)
+# ulps of a typical element, so the corruption survives the addition
+# instead of rounding away to the identity.
+SUBTHRESHOLD_REL = 0.25
+
+
+def _apply_subthreshold(o3: jnp.ndarray, spec: FaultSpec) -> jnp.ndarray:
+    n, m, p = o3.shape
+    f = o3.astype(F32)
+    eps = float(jnp.finfo(o3.dtype).eps) if jnp.issubdtype(
+        o3.dtype, jnp.floating) else float(jnp.finfo(F32).eps)
+    delta = spec.add * eps * jnp.sqrt(jnp.sum(f * f))
+    mask = position_mask(spec, n, m, p)
+    flat = f.reshape(-1)
+    return jnp.where(mask, flat + delta, flat).astype(o3.dtype).reshape(
+        o3.shape)
+
+
+@register_fault_model("subthreshold", detectable=False,
+                      apply=_apply_subthreshold)
+def plan_subthreshold(key, n, m, p, max_elems: int = 100) -> FaultSpec:
+    """Negative control: one element shifted by SUBTHRESHOLD_REL * eps *
+    ||O||_F - provably below the thresholds.py detection floor, so a
+    detection here is a threshold-model bug, not a catch."""
+    off = jax.random.randint(key, (max_elems,), 0, n * m * p)
+    return _spec(FAULT_MODELS["subthreshold"].model_id, 2, -1, 1,
+                 1.0, SUBTHRESHOLD_REL, off)
+
+
+# --------------------------------------------------------------------------
+# pre-registry single-shot helpers (kept for examples / scheme tests)
+# --------------------------------------------------------------------------
 
 class InjectionPlan(NamedTuple):
     axis: jnp.ndarray       # 0 = corrupt a row, 1 = corrupt a column
@@ -32,7 +292,6 @@ def plan(key: jax.Array, n: int, m: int, max_elems: int = 100,
     k1, k2, k3, k4, k5 = jax.random.split(key, 5)
     ax = (jax.random.bernoulli(k1).astype(jnp.int32)
           if axis is None else jnp.int32(axis))
-    limit = jnp.where(ax == 0, m, n)     # row corruption spans columns
     idx = jax.random.randint(k2, (), 0, jnp.where(ax == 0, n, m))
     span = int(min(max_elems, max(n, m)))
     nelem = jax.random.randint(k3, (), 1, span + 1)

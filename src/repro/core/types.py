@@ -47,6 +47,16 @@ class FaultReport(NamedTuple):
         )
 
 
+def scheme_histogram(corrected_by) -> dict:
+    """Host-side histogram of a batched `corrected_by` field: scheme name ->
+    count. The campaign engine and benchmarks aggregate per-trial
+    FaultReports through this single definition so their tables agree."""
+    import numpy as np
+    arr = np.asarray(corrected_by).reshape(-1)
+    return {name: int((arr == val).sum())
+            for val, name in SCHEME_NAMES.items() if (arr == val).any()}
+
+
 @dataclasses.dataclass(frozen=True)
 class ProtectConfig:
     """Static configuration of a protected op (hashable: safe as a jit

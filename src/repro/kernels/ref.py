@@ -28,6 +28,42 @@ def checksum_reduce_ref(o: jnp.ndarray, bm: int, bn: int) -> Tuple:
     return colsum, rowsum, sumsq
 
 
+def conv2d_ref(d: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+               padding="VALID", groups: int = 1) -> jnp.ndarray:
+    """Independent oracle for checksums.conv2d: im2col (static strided
+    slices) + fp32 matmul, never touching the conv primitive - so campaign
+    trials that compare against it exercise a genuinely different lowering.
+
+    d: (N, Ch, H, W), w: (M, Ch/G, R, R) -> (N, M, E, E'), NCHW like conv2d.
+    """
+    n, ch, h, wd = d.shape
+    m, chg, r, _ = w.shape
+    if padding == "SAME":
+        # XLA's SAME is asymmetric: low side gets the floor of the total
+        def _same(size):
+            out = -(-size // stride)
+            total = max((out - 1) * stride + r - size, 0)
+            return total // 2, total - total // 2
+        pads = (_same(h), _same(wd))
+    elif padding == "VALID":
+        pads = ((0, 0), (0, 0))
+    else:
+        pads = ((int(padding),) * 2,) * 2
+    if any(p for lohi in pads for p in lohi):
+        d = jnp.pad(d, ((0, 0), (0, 0), *pads))
+        h, wd = h + sum(pads[0]), wd + sum(pads[1])
+    e1 = (h - r) // stride + 1
+    e2 = (wd - r) // stride + 1
+    cols = [d[:, :, dy:dy + e1 * stride:stride, dx:dx + e2 * stride:stride]
+            for dy in range(r) for dx in range(r)]
+    # (N, Ch, R*R, E1, E2) -> (N, G, Ch/G * R*R, E1*E2)
+    pat = jnp.stack(cols, axis=2).astype(F32)
+    pat = pat.reshape(n, groups, chg * r * r, e1 * e2)
+    wm = w.astype(F32).reshape(groups, m // groups, chg * r * r)
+    o = jnp.einsum("ngkp,gmk->ngmp", pat, wm)
+    return o.reshape(n, m, e1, e2).astype(d.dtype)
+
+
 def chunk_sums_ref(o: jnp.ndarray, rb: int, cb: int):
     """Oracle for ops.chunk_sums_from_partials: the (s5, s6, s7, sumsq)
     per-chunk values computed directly from O."""

@@ -1,0 +1,67 @@
+"""`hypothesis` compatibility layer for the tier-1 suite.
+
+When hypothesis is installed, this module re-exports the real thing and the
+property tests run unchanged. In a minimal environment (no hypothesis) it
+degrades to a deterministic seed sweep: `given(...)` draws a fixed number
+of example tuples from a seeded PRNG at collection time and expands into
+`pytest.mark.parametrize`, so `PYTHONPATH=src python -m pytest -x -q`
+always collects and runs. Only the strategy surface the suite actually
+uses (`st.integers`, `st.sampled_from`) is emulated.
+"""
+from __future__ import annotations
+
+try:
+    import hypothesis as _hypothesis
+    import hypothesis.strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+    given = _hypothesis.given
+    settings = _hypothesis.settings
+    HealthCheck = _hypothesis.HealthCheck
+except ModuleNotFoundError:
+    import random
+
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+    FALLBACK_EXAMPLES = 5
+    _FALLBACK_SEED = 0xAB_F7
+
+    class HealthCheck:
+        too_slow = "too_slow"
+        data_too_large = "data_too_large"
+        filter_too_much = "filter_too_much"
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 - mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[rng.randrange(len(elements))])
+
+    def given(**strategies):
+        names = list(strategies)
+
+        def deco(fn):
+            # deterministic per-test examples: the stream depends only on
+            # the test name and argument names, not on import order
+            rng = random.Random(f"{_FALLBACK_SEED}:{fn.__name__}")
+            cases = [tuple(strategies[n].draw(rng) for n in names)
+                     for _ in range(FALLBACK_EXAMPLES)]
+            if len(names) == 1:  # pytest wants scalars for one argname
+                cases = [c[0] for c in cases]
+            return pytest.mark.parametrize(",".join(names), cases)(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco

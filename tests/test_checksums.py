@@ -1,16 +1,16 @@
 """Checksum algebra (paper Eq. 4/5/6): property-based over random shapes,
-dtypes and adversarial value distributions."""
-import hypothesis
-import hypothesis.strategies as st
+dtypes and adversarial value distributions. Runs under hypothesis when
+installed, else as a deterministic seed sweep (see hypcompat)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypcompat import HealthCheck, given, settings, st
 
 from repro.core import checksums as C
 
 SETTINGS = dict(max_examples=25, deadline=None,
-                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+                suppress_health_check=[HealthCheck.too_slow])
 
 
 def rand(key, shape, dtype, scale=1.0):
@@ -18,11 +18,11 @@ def rand(key, shape, dtype, scale=1.0):
     return x.astype(dtype)
 
 
-@hypothesis.given(
+@given(
     n=st.integers(2, 33), k=st.integers(1, 40), m=st.integers(2, 37),
     seed=st.integers(0, 2**31 - 1),
     scale=st.sampled_from([1.0, 1e-3, 1e3]))
-@hypothesis.settings(**SETTINGS)
+@settings(**SETTINGS)
 def test_matmul_checksum_invariants(n, k, m, seed, scale):
     """C_o1..C_o7 computed from input checksums equal the corresponding
     output summations (fp32, rounding-level tolerance)."""
@@ -44,11 +44,11 @@ def test_matmul_checksum_invariants(n, k, m, seed, scale):
     np.testing.assert_allclose(cs.c4[:, 0], ss.s4[:, 0], atol=tol * m)
 
 
-@hypothesis.given(
+@given(
     n=st.integers(1, 6), ch=st.integers(1, 5), m=st.integers(1, 7),
     h=st.integers(4, 12), r=st.sampled_from([1, 3]),
     stride=st.sampled_from([1, 2]), seed=st.integers(0, 2**31 - 1))
-@hypothesis.settings(**SETTINGS)
+@settings(**SETTINGS)
 def test_conv_checksum_invariants(n, ch, m, h, r, stride, seed):
     """The distributive property of (x) (paper Eq. 4) holds for the real
     convolution: checksum convs equal output summations."""
@@ -68,9 +68,9 @@ def test_conv_checksum_invariants(n, ch, m, h, r, stride, seed):
     np.testing.assert_allclose(cs.c2, ss.s2, atol=1e-4 * scale)
 
 
-@hypothesis.given(groups=st.sampled_from([1, 2, 4]),
+@given(groups=st.sampled_from([1, 2, 4]),
                   seed=st.integers(0, 2**31 - 1))
-@hypothesis.settings(**SETTINGS)
+@settings(**SETTINGS)
 def test_grouped_conv_checksums(groups, seed):
     """Paper SS5.2: grouped-conv kernel checksums concatenate per group and
     the output invariants still hold."""
@@ -100,8 +100,8 @@ def test_distributive_property():
     np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
 
 
-@hypothesis.given(seed=st.integers(0, 2**31 - 1))
-@hypothesis.settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
 def test_bf16_no_false_positive(seed):
     """Error-free detection must not fire in bf16 (threshold contract)."""
     from repro.core import protect_matmul_output

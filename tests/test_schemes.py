@@ -1,11 +1,10 @@
 """Scheme-level detect/locate/correct under the paper's injection model
 (SS6.1): up to 100 corrupted elements in one row/column of the output."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypcompat import given, settings, st
 
 import repro.core as core
 from repro.core import injection as inj
@@ -23,9 +22,9 @@ def _mk(seed, n=96, k=48, m=80, dtype=jnp.float32):
     return d, w, o
 
 
-@hypothesis.given(seed=st.integers(0, 2**31 - 1),
+@given(seed=st.integers(0, 2**31 - 1),
                   axis=st.sampled_from([0, 1]))
-@hypothesis.settings(**SETTINGS)
+@settings(**SETTINGS)
 def test_row_col_fault_corrected(seed, axis):
     """Row-confined faults -> RC; column-confined -> ClC (or better)."""
     d, w, o = _mk(seed)
@@ -42,8 +41,8 @@ def test_row_col_fault_corrected(seed, axis):
                                atol=2e-2 * scale)
 
 
-@hypothesis.given(seed=st.integers(0, 2**31 - 1))
-@hypothesis.settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
 def test_single_block_corrected_by_coc(seed):
     d, w, o = _mk(seed)
     o_bad = inj.inject_single_block(o, jax.random.PRNGKey(seed))
@@ -103,9 +102,9 @@ def test_ladder_configurations(rc, clc, fc):
     np.testing.assert_allclose(np.asarray(fixed), np.asarray(o), atol=1e-2)
 
 
-@hypothesis.given(seed=st.integers(0, 2**31 - 1),
+@given(seed=st.integers(0, 2**31 - 1),
                   axis=st.sampled_from([0, 1]))
-@hypothesis.settings(max_examples=10, deadline=None)
+@settings(max_examples=10, deadline=None)
 def test_conv_block_row_col_faults(seed, axis):
     """Paper's native conv case: corrupted block row/column of O."""
     key = jax.random.PRNGKey(seed)
