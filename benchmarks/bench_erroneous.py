@@ -11,11 +11,14 @@ report faults in the same vocabulary.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DEFAULT_CONFIG, FAULT_MODELS, scheme_histogram
+from repro.core import (FAULT_MODELS, ProtectionPlan, build_plan,
+                        scheme_histogram)
 from repro.core import injection as inj
 from repro.models import cnn
 from .common import row, time_fn
@@ -32,11 +35,14 @@ def _run_model(name: str, layerwise: bool):
     params = cnn.init_cnn(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (BATCH, 3, IMG, IMG),
                           jnp.float32)
-    if layerwise:
-        pol = cnn.layer_policies(cfg, BATCH)
-    else:
-        pol = [DEFAULT_CONFIG.replace(rc_enabled=False, clc_enabled=False)
-               ] * len(cfg.convs)
+    plan = build_plan(params, cfg, batch=BATCH)
+    if not layerwise:
+        # Fig. 10b variant: same plan, RC/ClC forced off everywhere
+        plan = ProtectionPlan(
+            entries={n: dataclasses.replace(
+                e, cfg=e.cfg.replace(rc_enabled=False, clc_enabled=False))
+                for n, e in plan.entries.items()},
+            meta=dict(plan.meta))
     off = cfg.__class__(**{**cfg.__dict__, "abft": False})
     f_plain = jax.jit(lambda p, x: cnn.forward_cnn(p, x, off)[0])
     t_plain = time_fn(f_plain, params, x)
@@ -56,7 +62,7 @@ def _run_model(name: str, layerwise: bool):
                           max_elems=100)
         o_bad = inj.inject(o_clean, spec, model)
         f = jax.jit(lambda p_, x_, o_: cnn.forward_cnn(
-            p_, x_, cfg, pol, inject_layer=layer, inject_o=o_))
+            p_, x_, cfg, plan=plan, inject_layer=layer, inject_o=o_))
         logits, rep = f(params, x, o_bad)
         total += time_fn(f, params, x, o_bad)
         corrected.append(int(rep.corrected_by))

@@ -7,7 +7,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import DEFAULT_CONFIG
+from repro.core import build_plan
 from repro.models import cnn
 from .common import row, time_fn
 
@@ -25,10 +25,11 @@ def run(models=("alexnet", "vgg19", "resnet18", "yolov2")):
         params = cnn.init_cnn(jax.random.PRNGKey(0), cfg)
         x = jax.random.normal(jax.random.PRNGKey(1),
                               (BATCH, 3, IMG, IMG), jnp.float32)
-        pol = cnn.layer_policies(cfg, BATCH)
+        plan = build_plan(params, cfg, batch=BATCH)
         off = cfg.__class__(**{**cfg.__dict__, "abft": False})
         f_plain = jax.jit(lambda p, x: cnn.forward_cnn(p, x, off)[0])
-        f_prot = jax.jit(lambda p, x: cnn.forward_cnn(p, x, cfg, pol)[0])
+        f_prot = jax.jit(lambda p, x: cnn.forward_cnn(p, x, cfg,
+                                                      plan=plan)[0])
         t0 = time_fn(f_plain, params, x)
         t1 = time_fn(f_prot, params, x)
         ovh = (t1 - t0) / t0 * 100

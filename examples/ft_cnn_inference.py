@@ -1,6 +1,8 @@
 """Paper-faithful example (FT-Caffe workflow): resilient CNN inference
 under per-layer soft-error injection - the paper's SS6 protocol on
-AlexNet/ResNet-18/YOLOv2 with layerwise RC/ClC policy.
+AlexNet/ResNet-18/YOLOv2 with the two-phase ProtectionPlan flow: the plan
+is compiled offline (layerwise RC/ClC policy + precomputed weight
+checksums), then every online forward just takes it.
 
     PYTHONPATH=src python examples/ft_cnn_inference.py --model resnet18
 """
@@ -13,7 +15,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core import SCHEME_NAMES  # noqa: E402
+from repro.core import SCHEME_NAMES, build_plan  # noqa: E402
 from repro.core import injection as inj  # noqa: E402
 from repro.models import cnn  # noqa: E402
 
@@ -32,26 +34,30 @@ def main():
     params = cnn.init_cnn(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1),
                           (args.batch, 3, args.img, args.img))
-    policies = cnn.layer_policies(cfg, args.batch)
+    # offline phase: one plan per model - per-layer RC/ClC decisions and
+    # precomputed weight checksums (serializable: plan.save("plan.json"))
+    plan = build_plan(params, cfg, batch=args.batch)
+    convs = [e for e in plan.entries.values() if e.op.kind == "conv"]
     print(f"{args.model}: {len(cfg.convs)} conv layers; layerwise policy "
-          f"RC on {sum(p.rc_enabled for p in policies)}, "
-          f"ClC on {sum(p.clc_enabled for p in policies)} layers")
+          f"RC on {sum(e.cfg.rc_enabled for e in convs)}, "
+          f"ClC on {sum(e.cfg.clc_enabled for e in convs)} layers")
 
-    clean, _ = cnn.forward_cnn(params, x, cfg, policies)
+    clean, _ = cnn.forward_cnn(params, x, cfg, plan=plan)
     clean_top1 = np.argmax(np.asarray(clean), -1)
 
     # the paper's protocol: L epochs, epoch i injects into conv layer i
     for layer in range(len(cfg.convs)):
         _, o_clean = cnn.conv_output_at(params, x, cfg, layer)
-        plan = inj.plan(jax.random.PRNGKey(layer + 100), o_clean.shape[0],
-                        o_clean.shape[1], max_elems=100)
-        o_bad = inj.inject_conv(o_clean, plan)
-        logits, rep = cnn.forward_cnn(params, x, cfg, policies,
+        p = inj.plan(jax.random.PRNGKey(layer + 100), o_clean.shape[0],
+                     o_clean.shape[1], max_elems=100)
+        o_bad = inj.inject_conv(o_clean, p)
+        logits, rep = cnn.forward_cnn(params, x, cfg, plan=plan,
                                       inject_layer=layer, inject_o=o_bad)
+        r = rep.by_layer[f"conv{layer}"]          # per-layer attribution
         top1 = np.argmax(np.asarray(logits), -1)
         status = "OK " if np.array_equal(top1, clean_top1) else "DIFF"
-        print(f"  layer {layer:2d}: detected={int(rep.detected)} "
-              f"corrected_by={SCHEME_NAMES[int(rep.corrected_by)]:9s} "
+        print(f"  layer {layer:2d}: detected={int(r.detected)} "
+              f"corrected_by={SCHEME_NAMES[int(r.corrected_by)]:9s} "
               f"residual={int(rep.residual)} top1={status}")
 
 

@@ -57,6 +57,22 @@ def main():
         argnums=(0, 1))(d, w)
     print(f"protected vjp  : grad shapes {grads[0].shape}, {grads[1].shape}")
 
+    # ---- 6. the two-phase ProtectionPlan flow ---------------------------
+    # offline: compile a model-level plan (per-layer RC/ClC policy +
+    # precomputed weight checksums), serializable to JSON+npz
+    from repro.models import cnn
+    cfg = cnn.alexnet(0.12)
+    cfg = cfg.__class__(**{**cfg.__dict__, "img": 64})
+    params = cnn.init_cnn(jax.random.PRNGKey(0), cfg)
+    plan = core.build_plan(params, cfg, batch=4)
+    # online: every forward reuses the offline encode; the report is
+    # per-layer (report.by_layer["conv3"], .summary(), .scheme_histogram())
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 3, 64, 64))
+    logits, report = cnn.forward_cnn(params, x, cfg, plan=plan)
+    print(f"plan forward   : {len(plan)} planned ops, "
+          f"detected={int(report.detected)}, "
+          f"layers={list(report.by_layer)[:3]}...")
+
 
 if __name__ == "__main__":
     main()

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import injection as inj
-from repro.core import protect_matmul_output, protected_conv
+from repro.core import conv_entry, matmul_entry, protect_op
 from repro.core import types as T
 from repro.kernels import ref
 
@@ -145,7 +145,10 @@ def _matmul_trial(case: MatmulCase, cfg: T.ProtectConfig, max_elems: int,
         w = jax.random.normal(kw, (case.k, case.m), F32)
         o_ref, _ = ref.abft_matmul_ref(d, w, bm=case.n, bn=case.m)
         o_bad = injectf(kf, model_id, o_ref)
-        out, rep = protect_matmul_output(d, w, o_bad, cfg=cfg)
+        # the ProtectionPlan path: weight checksums encoded once per trial
+        # weight draw (the offline step), then handed to the unified op
+        entry = matmul_entry("cell", w, cfg)
+        out, rep = protect_op(entry.op, (d, w), entry=entry, o=o_bad)
         return _score(out, rep, o_ref)
 
     return trial
@@ -161,7 +164,8 @@ def _conv_trial(case: ConvCase, cfg: T.ProtectConfig, max_elems: int,
         w = jax.random.normal(kw, (case.m, case.ch, case.r, case.r), F32)
         o_ref = ref.conv2d_ref(d, w, stride=case.stride)
         o_bad = injectf(kf, model_id, o_ref)
-        out, rep = protected_conv(d, w, stride=case.stride, cfg=cfg, o=o_bad)
+        entry = conv_entry("cell", w, cfg, stride=case.stride)
+        out, rep = protect_op(entry.op, (d, w), entry=entry, o=o_bad)
         return _score(out, rep, o_ref)
 
     return trial

@@ -1,25 +1,30 @@
 """ABFT core: the paper's contribution (checksum schemes + multischeme
 workflow) for convolution and its exact block-level generalisation to
-matmul."""
-from . import checksums, injection, policy, schemes, thresholds
+matmul, plus the offline-compiled model-level ProtectionPlan API."""
+from . import checksums, injection, plan, policy, schemes, thresholds
 from .protected import (WeightChecksums, abft_matmul_vjp, pick_chunk,
                         protect_matmul_output, protected_conv,
                         protected_grouped_matmul, protected_matmul,
                         weight_checksums_matmul)
 from .injection import (CONTROL_MODEL, FAULT_MODELS, FaultModel, FaultSpec,
                         fault_model_names, register_fault_model)
+from .plan import (OpSpec, PlanEntry, PlanStaleError, ProtectionPlan,
+                   build_plan, conv_entry, grouped_matmul_entry,
+                   matmul_entry, protect_op)
 from .types import (CHECKSUM_REFRESH, CLC, COC, DEFAULT_CONFIG, FC, NONE, RC,
-                    RECOMPUTE, SCHEME_NAMES, FaultReport, ProtectConfig,
-                    scheme_histogram)
+                    RECOMPUTE, SCHEME_NAMES, FaultReport, ModelReport,
+                    ProtectConfig, as_fault_report, scheme_histogram)
 
 __all__ = [
-    "checksums", "injection", "policy", "schemes", "thresholds",
+    "checksums", "injection", "plan", "policy", "schemes", "thresholds",
     "WeightChecksums", "abft_matmul_vjp", "pick_chunk",
     "protect_matmul_output", "protected_conv", "protected_grouped_matmul",
     "protected_matmul", "weight_checksums_matmul",
     "CONTROL_MODEL", "FAULT_MODELS", "FaultModel", "FaultSpec",
     "fault_model_names", "register_fault_model",
+    "OpSpec", "PlanEntry", "PlanStaleError", "ProtectionPlan", "build_plan",
+    "conv_entry", "grouped_matmul_entry", "matmul_entry", "protect_op",
     "CHECKSUM_REFRESH", "CLC", "COC", "DEFAULT_CONFIG", "FC", "NONE", "RC",
-    "RECOMPUTE", "SCHEME_NAMES", "FaultReport", "ProtectConfig",
-    "scheme_histogram",
+    "RECOMPUTE", "SCHEME_NAMES", "FaultReport", "ModelReport",
+    "ProtectConfig", "as_fault_report", "scheme_histogram",
 ]

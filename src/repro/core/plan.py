@@ -1,0 +1,398 @@
+"""Offline-compiled, model-level protection plans (the ProtectionPlan API).
+
+The paper's runtime model (Table 4) assumes kernel/weight checksums are
+encoded **once, offline** and that RC/ClC enablement is a **per-layer
+offline decision**. This module makes that the shape of the interface
+instead of a convention every call site re-implements:
+
+    # offline (once per model / deployment)
+    plan = build_plan(params, arch_cfg, cost_model=None, batch=8)
+    plan.save("plan.json")                      # JSON + sibling .npz
+
+    # online (every inference)
+    plan = ProtectionPlan.load("plan.json")
+    plan.validate(params)                       # stale plans fail loudly
+    logits, report = forward_cnn(params, x, arch_cfg, plan=plan)
+
+A plan maps param-tree paths to `PlanEntry`s, each holding the op geometry
+(`OpSpec`), the SS4.3 policy decision (a static `ProtectConfig`) and the
+precomputed weight checksums ("kernel checksums can be precalculated
+before the application"). `protect_op` is the single runtime entry point
+that subsumes protected_matmul / protected_conv / protected_grouped_matmul
+behind one op-spec.
+
+Plans close over jit: configs are static python, checksums become
+compile-time constants - exactly the offline-encode semantics the paper's
+overhead accounting assumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import checksums as C
+from .policy import CostModel, OpShape, decide_rc_clc
+from .protected import (WeightChecksums, protect_matmul_output,
+                        protected_conv, protected_grouped_matmul,
+                        protected_matmul, weight_checksums_matmul)
+from .types import DEFAULT_CONFIG, FaultReport, ProtectConfig
+
+PLAN_SCHEMA = "repro.plan/v1"
+
+OP_KINDS = ("matmul", "conv", "grouped_matmul")
+
+
+class PlanStaleError(ValueError):
+    """A plan's recorded weight shapes/dtypes no longer match the params
+    (retrained, re-quantised or re-architected model): its precomputed
+    checksums would silently verify the wrong invariants, so using it is
+    an error, not a fallback."""
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """Static geometry of one protected op (hashable: jit-safe)."""
+    kind: str = "matmul"       # one of OP_KINDS
+    stride: int = 1            # conv only
+    pad: int = 0               # conv only: symmetric spatial padding
+    groups: int = 1            # conv only
+
+    def __post_init__(self):
+        if self.kind not in OP_KINDS:
+            raise ValueError(f"unknown op kind {self.kind!r} "
+                             f"(have {OP_KINDS})")
+
+    @property
+    def padding(self):
+        return [(self.pad, self.pad)] * 2
+
+
+@dataclasses.dataclass
+class PlanEntry:
+    """One op's offline decisions: policy config + precomputed weight
+    checksums + the weight identity they were encoded from."""
+    name: str
+    op: OpSpec
+    cfg: ProtectConfig
+    wck: Any = None                 # WeightChecksums | (cw1, cw2) | None
+    w_shape: Optional[Tuple[int, ...]] = None
+    w_dtype: Optional[str] = None
+    # host-side fp32 content fingerprint (signed weight sum, plus the
+    # abs-sum as its noise scale), set by build_plan on concrete params:
+    # catches same-shape retrains that shape/dtype checks cannot. None
+    # when the entry was built inside a trace (campaign trials) or
+    # without params.
+    w_sum: Optional[float] = None
+    w_asum: Optional[float] = None
+
+    def check_weight(self, w) -> None:
+        """Trace-time staleness check against the weight actually used."""
+        if self.w_shape is not None and tuple(w.shape) != tuple(self.w_shape):
+            raise PlanStaleError(
+                f"plan entry {self.name!r} was built for weight shape "
+                f"{tuple(self.w_shape)} but got {tuple(w.shape)}; rebuild "
+                "the plan with build_plan()")
+        if self.w_dtype is not None and str(w.dtype) != self.w_dtype:
+            raise PlanStaleError(
+                f"plan entry {self.name!r} was built for dtype "
+                f"{self.w_dtype} but got {w.dtype}; rebuild the plan "
+                "with build_plan()")
+
+
+# --------------------------------------------------------------------------
+# entry builders (the offline encode step)
+# --------------------------------------------------------------------------
+
+def matmul_entry(name: str, w=None, cfg: ProtectConfig = DEFAULT_CONFIG
+                 ) -> PlanEntry:
+    """Entry for O = D @ W[K,M]; w=None builds a policy-only entry."""
+    if w is None:
+        return PlanEntry(name, OpSpec("matmul"), cfg)
+    return PlanEntry(name, OpSpec("matmul"), cfg,
+                     wck=weight_checksums_matmul(w, cfg.col_chunk),
+                     w_shape=tuple(w.shape), w_dtype=str(w.dtype))
+
+
+def conv_entry(name: str, w=None, cfg: ProtectConfig = DEFAULT_CONFIG,
+               stride: int = 1, pad: int = 0, groups: int = 1) -> PlanEntry:
+    """Entry for O = D (x) W[M,Ch,R,R]; w=None builds a policy-only entry."""
+    op = OpSpec("conv", stride=stride, pad=pad, groups=groups)
+    if w is None:
+        return PlanEntry(name, op, cfg)
+    return PlanEntry(name, op, cfg, wck=C.encode_w_conv(w, groups=groups),
+                     w_shape=tuple(w.shape), w_dtype=str(w.dtype))
+
+
+def grouped_matmul_entry(name: str, w=None,
+                         cfg: ProtectConfig = DEFAULT_CONFIG) -> PlanEntry:
+    """Entry for expert-batched O[g] = D[g] @ W[g] (per-group checksums are
+    derived from runtime operands inside the vmapped op)."""
+    e = PlanEntry(name, OpSpec("grouped_matmul"), cfg)
+    if w is not None:
+        e.w_shape, e.w_dtype = tuple(w.shape), str(w.dtype)
+    return e
+
+
+# --------------------------------------------------------------------------
+# the unified protected-op entry point
+# --------------------------------------------------------------------------
+
+def protect_op(op: OpSpec, inputs, entry: Optional[PlanEntry] = None,
+               cfg: Optional[ProtectConfig] = None, o=None,
+               ) -> Tuple[jnp.ndarray, FaultReport]:
+    """Run one protected op through the multischeme workflow.
+
+    inputs is (d, w) or (d, w, bias). `entry` supplies the offline policy
+    config and precomputed weight checksums (and is staleness-checked at
+    trace time); without an entry, `cfg` (default DEFAULT_CONFIG) applies
+    and weight checksums are derived per call. `o` injects an
+    already-computed output (tests / fused kernels / fault campaigns).
+    """
+    d, w = inputs[0], inputs[1]
+    bias = inputs[2] if len(inputs) > 2 else None
+    if entry is not None:
+        if entry.op != op:
+            # a mismatched pair would unpack wrong-geometry checksums and
+            # verify the wrong invariants instead of failing clearly
+            raise ValueError(
+                f"protect_op: op spec {op} does not match entry "
+                f"{entry.name!r}'s op {entry.op}")
+        entry.check_weight(w)
+        use_cfg = entry.cfg if cfg is None else cfg
+        wck = entry.wck
+    else:
+        use_cfg = DEFAULT_CONFIG if cfg is None else cfg
+        wck = None
+
+    if op.kind == "matmul":
+        if o is not None:
+            if use_cfg is None or not use_cfg.enabled:
+                return o, FaultReport.clean()
+            return protect_matmul_output(d, w, o, wck=wck, bias=bias,
+                                         cfg=use_cfg)
+        return protected_matmul(d, w, wck=wck, bias=bias, cfg=use_cfg)
+    if op.kind == "conv":
+        return protected_conv(d, w, bias=bias, stride=op.stride,
+                              padding=op.padding, groups=op.groups,
+                              wck=wck, cfg=use_cfg, o=o)
+    if op.kind == "grouped_matmul":
+        if o is not None or bias is not None:
+            # silently dropping either would report clean verdicts on
+            # operands the op never saw
+            raise NotImplementedError(
+                "protect_op: grouped_matmul does not support `o` injection "
+                "or bias")
+        return protected_grouped_matmul(d, w, cfg=use_cfg)
+    raise ValueError(f"unknown op kind {op.kind!r}")
+
+
+# --------------------------------------------------------------------------
+# the plan
+# --------------------------------------------------------------------------
+
+def _weight_leaf(params, name: str):
+    """Resolve an entry name ('conv3', 'fc', 'block/ffn/gate') to its
+    weight leaf in a nested param dict."""
+    node = params
+    for part in name.split("/"):
+        if not isinstance(node, dict) or part not in node:
+            raise KeyError(name)
+        node = node[part]
+    if isinstance(node, dict):
+        if "w" not in node:
+            raise KeyError(name)
+        node = node["w"]
+    return node
+
+
+@dataclasses.dataclass
+class ProtectionPlan:
+    """Per-model protection plan: ordered {param path -> PlanEntry}."""
+    entries: Dict[str, PlanEntry] = dataclasses.field(default_factory=dict)
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __getitem__(self, name: str) -> PlanEntry:
+        return self.entries[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.entries
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def get(self, name: str, default=None) -> Optional[PlanEntry]:
+        return self.entries.get(name, default)
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self.entries)
+
+    def summary(self) -> Dict[str, dict]:
+        """Host-side table of the offline decisions."""
+        return {name: {"kind": e.op.kind,
+                       "enabled": e.cfg.enabled,
+                       "rc": e.cfg.rc_enabled, "clc": e.cfg.clc_enabled,
+                       "fc": e.cfg.fc_enabled,
+                       "precomputed_checksums": e.wck is not None}
+                for name, e in self.entries.items()}
+
+    # -- staleness ---------------------------------------------------------
+    def validate(self, params, rtol: float = 1e-5) -> None:
+        """Raise PlanStaleError unless every entry's recorded weight
+        shape/dtype AND content fingerprint match `params` (missing
+        layers count as stale). The fingerprint (fp32 weight sum, same
+        audit style as runtime.ft.weight_checksums) catches same-shape
+        retrains whose stale checksums would silently fire detection on
+        clean data; rtol absorbs cross-backend reduction-order noise."""
+        problems = []
+        for name, e in self.entries.items():
+            try:
+                w = _weight_leaf(params, name)
+            except KeyError:
+                problems.append(f"{name}: not found in params")
+                continue
+            if e.w_shape is not None and tuple(w.shape) != tuple(e.w_shape):
+                problems.append(f"{name}: shape {tuple(e.w_shape)} in plan "
+                                f"vs {tuple(w.shape)} in params")
+                continue
+            if e.w_dtype is not None and str(w.dtype) != e.w_dtype:
+                problems.append(f"{name}: dtype {e.w_dtype} in plan vs "
+                                f"{w.dtype} in params")
+                continue
+            if e.w_sum is not None:
+                w32 = w.astype(jnp.float32)
+                got = float(jnp.sum(w32))
+                got_abs = float(jnp.sum(jnp.abs(w32)))
+                # tolerance scales with sum|w|, not the signed sum: for
+                # zero-mean weights the signed sum cancels to ~0 while
+                # reduction-order noise scales with the element magnitudes
+                scale = rtol * ((e.w_asum or abs(e.w_sum)) + 1.0)
+                drift = abs(got - e.w_sum)
+                if e.w_asum is not None:
+                    drift = max(drift, abs(got_abs - e.w_asum))
+                if drift > scale:
+                    problems.append(
+                        f"{name}: weight content changed (fingerprint "
+                        f"{e.w_sum:.6g} in plan vs {got:.6g} in params - "
+                        "same-shape retrain?)")
+        if problems:
+            raise PlanStaleError(
+                "stale ProtectionPlan (rebuild with build_plan): "
+                + "; ".join(problems))
+
+    # -- serialization (JSON structure + npz checksum payload) -------------
+    @staticmethod
+    def _paths(path: str) -> Tuple[str, str]:
+        base = path[:-5] if str(path).endswith(".json") else str(path)
+        return base + ".json", base + ".npz"
+
+    def save(self, path: str) -> None:
+        """Write `<base>.json` (structure) + `<base>.npz` (checksums)."""
+        json_path, npz_path = self._paths(path)
+        arrays: Dict[str, np.ndarray] = {}
+        entries_doc = {}
+        for name, e in self.entries.items():
+            doc = {"op": dataclasses.asdict(e.op),
+                   "cfg": dataclasses.asdict(e.cfg),
+                   "w_shape": list(e.w_shape) if e.w_shape else None,
+                   "w_dtype": e.w_dtype, "w_sum": e.w_sum,
+                   "w_asum": e.w_asum, "wck": None}
+            if isinstance(e.wck, WeightChecksums):
+                doc["wck"] = {"kind": "matmul",
+                              "col_chunk": int(e.wck.col_chunk)}
+                arrays[f"{name}/cw1"] = np.asarray(e.wck.cw1)
+                arrays[f"{name}/cw2"] = np.asarray(e.wck.cw2)
+            elif e.wck is not None:
+                cw1, cw2 = e.wck
+                doc["wck"] = {"kind": "conv"}
+                arrays[f"{name}/cw1"] = np.asarray(cw1)
+                arrays[f"{name}/cw2"] = np.asarray(cw2)
+            entries_doc[name] = doc
+        with open(json_path, "w") as f:
+            json.dump({"schema": PLAN_SCHEMA, "meta": self.meta,
+                       "entries": entries_doc}, f, indent=2)
+        np.savez(npz_path, **arrays)
+
+    @classmethod
+    def load(cls, path: str) -> "ProtectionPlan":
+        json_path, npz_path = cls._paths(path)
+        with open(json_path) as f:
+            raw = json.load(f)
+        if raw.get("schema") != PLAN_SCHEMA:
+            raise ValueError(f"unknown plan schema {raw.get('schema')!r} "
+                             f"(want {PLAN_SCHEMA})")
+        payload = np.load(npz_path)
+        entries: Dict[str, PlanEntry] = {}
+        for name, doc in raw["entries"].items():
+            wck = None
+            if doc["wck"] is not None:
+                cw1 = jnp.asarray(payload[f"{name}/cw1"])
+                cw2 = jnp.asarray(payload[f"{name}/cw2"])
+                if doc["wck"]["kind"] == "matmul":
+                    wck = WeightChecksums(cw1, cw2, doc["wck"]["col_chunk"])
+                else:
+                    wck = (cw1, cw2)
+            entries[name] = PlanEntry(
+                name, OpSpec(**doc["op"]), ProtectConfig(**doc["cfg"]),
+                wck=wck,
+                w_shape=tuple(doc["w_shape"]) if doc["w_shape"] else None,
+                w_dtype=doc["w_dtype"], w_sum=doc.get("w_sum"),
+                w_asum=doc.get("w_asum"))
+        return cls(entries=entries, meta=raw.get("meta", {}))
+
+
+# --------------------------------------------------------------------------
+# the offline compiler
+# --------------------------------------------------------------------------
+
+def _fingerprint(entry: PlanEntry, w) -> None:
+    """Record the host-side content fingerprint on a concrete weight."""
+    if w is not None:
+        w32 = w.astype(jnp.float32)
+        entry.w_sum = float(jnp.sum(w32))
+        entry.w_asum = float(jnp.sum(jnp.abs(w32)))
+
+
+def build_plan(params, arch_cfg, cost_model: Optional[CostModel] = None,
+               batch: int = 8) -> ProtectionPlan:
+    """Compile a model-level protection plan (the offline phase).
+
+    Walks `arch_cfg` (a models.cnn.CNNConfig-shaped object: `.convs`,
+    `.img`, `.in_ch`, `.abft`, `.scaled()`), decides RC/ClC per layer from
+    the SS4.3 cost model, and - when `params` is given - precomputes every
+    layer's weight checksums keyed by param-tree path. `params=None`
+    builds a policy-only plan (no checksums; the legacy layer_policies
+    shim uses this).
+    """
+    if not hasattr(arch_cfg, "convs"):
+        raise TypeError("build_plan expects a CNN architecture config with "
+                        f".convs; got {type(arch_cfg).__name__}")
+    base = (DEFAULT_CONFIG if getattr(arch_cfg, "abft", True)
+            else DEFAULT_CONFIG.replace(enabled=False))
+    entries: Dict[str, PlanEntry] = {}
+    img, ch = arch_cfg.img, arch_cfg.in_ch
+    for i, spec in enumerate(arch_cfg.convs):
+        e = (img + 2 * spec.pad - spec.kernel) // spec.stride + 1
+        out = arch_cfg.scaled(spec.out_ch)
+        shape = OpShape(n=batch, m=out, ch=ch, r=spec.kernel, h=e)
+        rc, clc = decide_rc_clc(shape, cost_model)
+        cfg = base.replace(rc_enabled=rc, clc_enabled=clc)
+        name = f"conv{i}"
+        w = params[name]["w"] if params is not None else None
+        entries[name] = conv_entry(name, w, cfg, stride=spec.stride,
+                                   pad=spec.pad)
+        _fingerprint(entries[name], w)
+        img = e // spec.pool if spec.pool else e
+        ch = out
+    if params is None or "fc" in params:
+        w = params["fc"]["w"] if params is not None else None
+        entries["fc"] = matmul_entry("fc", w, base)
+        _fingerprint(entries["fc"], w)
+    model = cost_model or CostModel()
+    meta = {"arch": getattr(arch_cfg, "name", "?"), "batch": batch,
+            "cost_model": {"alpha": model.alpha, "beta": model.beta},
+            "img": arch_cfg.img, "in_ch": arch_cfg.in_ch}
+    return ProtectionPlan(entries=entries, meta=meta)

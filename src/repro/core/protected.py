@@ -57,6 +57,86 @@ def pick_chunk(n: int, target: int) -> int:
     return best
 
 
+# --------------------------------------------------------------------------
+# shared multischeme scaffolding
+#
+# The matmul path (chunked, vmapped over tiles) and the conv path
+# (normalised N x M block form) used to carry parallel copies of the
+# detection comparison, the post-correction verification, the per-scheme
+# threshold derivation and the rung-list assembly. Both now go through the
+# four helpers below; only the geometry (how O is viewed as blocks and how
+# thresholds broadcast over residues) stays path-specific.
+# --------------------------------------------------------------------------
+
+def _detect_invariants(c5, c6, c7, s5, s6, s7, tau5, rows: int, cols: int,
+                       weighted: bool) -> jnp.ndarray:
+    """CoC-D: compare the scalar invariant (and optionally the two
+    index-weighted ones) against their thresholds. rows/cols are the block
+    extents that bound the index-weight noise amplification."""
+    detected = jnp.any(TH.mismatch(c5, s5, tau5))
+    if weighted:
+        detected = detected | jnp.any(
+            TH.mismatch(c6, s6, TH.tau_weighted(tau5, rows)))
+        detected = detected | jnp.any(
+            TH.mismatch(c7, s7, TH.tau_weighted(tau5, cols)))
+    return detected
+
+
+def _verify_invariants(cs: T.OutputChecksums, ss: T.OutputSums, tau5,
+                       t_elem, rows: int, cols: int) -> jnp.ndarray:
+    """Post-correction acceptance: scalar + weighted + row/column
+    invariants against *fresh* checksums.
+
+    Scalar invariants alone can accept a miscorrection: for a multi-element
+    burst, CoC's column locator is the delta-weighted mean of the corrupted
+    columns, and when that mean happens to sit near an integer the
+    single-point "fix" satisfies c5/c6/c7 while leaving every burst element
+    wrong (found by the campaign's differential oracle, ~0.5% of row
+    bursts). The row/column invariants are not fooled; checking them here
+    costs only inside the correction branch. `t_elem` is tau5 broadcast
+    against the per-row/column residues; a column residue sums `rows`
+    elements (~1/cols of the block energy), hence the sqrt scalings."""
+    ok = ~jnp.any(TH.mismatch(cs.c5, ss.s5, tau5))
+    ok &= ~jnp.any(TH.mismatch(cs.c6, ss.s6, TH.tau_weighted(tau5, rows)))
+    ok &= ~jnp.any(TH.mismatch(cs.c7, ss.s7, TH.tau_weighted(tau5, cols)))
+    trc = VERIFY_ROWCOL_SLACK * t_elem
+    ok &= ~jnp.any(TH.mismatch(cs.c1, ss.s1, trc / max(cols, 1) ** 0.5))
+    ok &= ~jnp.any(TH.mismatch(cs.c2, ss.s2, trc / max(rows, 1) ** 0.5))
+    return ok
+
+
+def _scheme_taus(kind: str, t_scalar, t_elem, rows: int, cols: int) -> tuple:
+    """Residue thresholds handed to a correction scheme. `t_scalar`
+    compares per-block scalar invariants; `t_elem` is pre-broadcast against
+    per-row/column residues (each column residue sums `rows` elements, i.e.
+    ~1/cols of the block's energy, and symmetrically for rows)."""
+    if kind == "scalar":
+        return (t_scalar,)
+    if kind == "col":
+        return (t_elem / max(cols, 1) ** 0.5,)
+    if kind == "row":
+        return (t_elem / max(rows, 1) ** 0.5,)
+    return (t_elem / max(cols, 1) ** 0.5, t_elem / max(rows, 1) ** 0.5)
+
+
+def _ladder_rungs(cfg: T.ProtectConfig, run_scheme):
+    """The multischeme escalation ladder (Fig. 7) from the layerwise
+    policy; disabled rungs never enter the compiled program. The
+    CHECKSUM_REFRESH rung is the Fig. 3 shortcut: fresh checksums inside
+    the verifier decide whether O was clean all along."""
+    rungs = [
+        (T.CHECKSUM_REFRESH, lambda o: (o, jnp.array(True))),
+        (T.COC, lambda o: run_scheme(S.coc_correct, o, "scalar")),
+    ]
+    if cfg.rc_enabled:
+        rungs.append((T.RC, lambda o: run_scheme(S.rc_correct, o, "col")))
+    if cfg.clc_enabled:
+        rungs.append((T.CLC, lambda o: run_scheme(S.clc_correct, o, "row")))
+    if cfg.fc_enabled:
+        rungs.append((T.FC, lambda o: run_scheme(S.fc_correct, o, "fc")))
+    return rungs
+
+
 class WeightChecksums(NamedTuple):
     """Chunked kernel checksums of W[K,M] (precomputable; paper: 'kernel
     checksums can be precalculated before the application')."""
@@ -193,13 +273,8 @@ def protect_matmul_output(
     c5a, c6a, c7a = _adjusted_scalars(cs)
 
     tau5 = TH.tau_scalar(sumsq, k, o.dtype, cfg.tau_factor, cs.absdot)
-    tau6 = TH.tau_weighted(tau5, rb)
-    tau7 = TH.tau_weighted(tau5, cb)
-
-    detected = jnp.any(TH.mismatch(c5a, s5, tau5))
-    if cfg.detect_weighted:
-        detected = detected | jnp.any(TH.mismatch(c6a, s6, tau6))
-        detected = detected | jnp.any(TH.mismatch(c7a, s7, tau7))
+    detected = _detect_invariants(c5a, c6a, c7a, s5, s6, s7, tau5, rb, cb,
+                                  cfg.detect_weighted)
 
     if cfg.detect_only:
         det = detected.astype(jnp.int32)
@@ -228,26 +303,11 @@ def protect_matmul_output(
         # one pass over O: the chunked view's sums carry the scalar
         # invariants too (unused s3/s4 are dead-code-eliminated by XLA)
         ssf = _chunk_ss(o)
-        s5v, s6v, s7v = ssf.s5[..., 0], ssf.s6[..., 0], ssf.s7[..., 0]
         t5 = TH.tau_scalar(ssf.sumsq, k, o.dtype, cfg.tau_factor,
                            csf.absdot)
-        c5f, c6f, c7f = _adjusted_scalars(csf)
-        ok = ~jnp.any(TH.mismatch(c5f, s5v, t5))
-        ok &= ~jnp.any(TH.mismatch(c6f, s6v, TH.tau_weighted(t5, rb)))
-        ok &= ~jnp.any(TH.mismatch(c7f, s7v, TH.tau_weighted(t5, cb)))
-        # scalar invariants alone can accept a miscorrection: for a
-        # multi-element burst, CoC's column locator is the delta-weighted
-        # mean of the corrupted columns, and when that mean happens to sit
-        # near an integer the single-point "fix" satisfies c5/c6/c7 while
-        # leaving every burst element wrong (found by the campaign's
-        # differential oracle, ~0.5% of row bursts). The row/column
-        # invariants are not fooled; checking them here costs only inside
-        # the correction branch.
-        c1f, c2f, _, _ = _rowcol_checksums(csf)
-        trc = VERIFY_ROWCOL_SLACK * t5[..., None, None]
-        ok &= ~jnp.any(TH.mismatch(c1f, ssf.s1, trc / max(cb, 1) ** 0.5))
-        ok &= ~jnp.any(TH.mismatch(c2f, ssf.s2, trc / max(rb, 1) ** 0.5))
-        return ok
+        csp = _chunk_cs_pytree(csf, need_rowcol=True)
+        return _verify_invariants(csp, ssf, t5[..., None],
+                                  t5[..., None, None], rb, cb)
 
     def _rowcol_checksums(cs):
         """c1..c4 for the RC/ClC/FC rungs (the expensive GEMVs; only paid
@@ -296,36 +356,17 @@ def protect_matmul_output(
 
     vmap2 = lambda f: jax.vmap(jax.vmap(f))
 
-    def _run_scheme(scheme_fn, o, need_rowcol, tau_kind):
+    def _run_scheme(scheme_fn, o, tau_kind):
         oc = _chunk_view(o)
-        cs_c = _chunk_cs_pytree(cs, need_rowcol)
+        cs_c = _chunk_cs_pytree(cs, need_rowcol=tau_kind != "scalar")
         ss_c = _chunk_ss(o)
         t5 = TH.tau_scalar(ss_c.sumsq, k, o.dtype, cfg.tau_factor, cs.absdot)
-        if tau_kind == "scalar":
-            taus = (t5[..., None],)
-        elif tau_kind == "col":           # per-column residues (RC): each
-            # column sums rb elements ~ sumsq/cb of the chunk's energy
-            taus = (t5[..., None, None] / max(cb, 1) ** 0.5,)
-        elif tau_kind == "row":           # per-row residues (ClC)
-            taus = (t5[..., None, None] / max(rb, 1) ** 0.5,)
-        else:                             # FC needs both
-            taus = (t5[..., None, None] / max(cb, 1) ** 0.5,
-                    t5[..., None, None] / max(rb, 1) ** 0.5)
+        taus = _scheme_taus(tau_kind, t5[..., None], t5[..., None, None],
+                            rb, cb)
         fixed, ok = vmap2(scheme_fn)(oc, cs_c, ss_c, *taus)
         return _unchunk(fixed), jnp.all(ok)
 
-    rungs = [
-        (T.CHECKSUM_REFRESH, lambda o: (o, jnp.array(True))),  # Fig.3 shortcut:
-        # fresh checksums inside _verify decide whether O was clean all along
-        (T.COC, lambda o: _run_scheme(S.coc_correct, o, False, "scalar")),
-    ]
-    if cfg.rc_enabled:
-        rungs.append((T.RC, lambda o: _run_scheme(S.rc_correct, o, True, "col")))
-    if cfg.clc_enabled:
-        rungs.append((T.CLC, lambda o: _run_scheme(S.clc_correct, o, True, "row")))
-    if cfg.fc_enabled:
-        rungs.append((T.FC, lambda o: _run_scheme(S.fc_correct, o, True, "fc")))
-
+    rungs = _ladder_rungs(cfg, _run_scheme)
     return run_ladder(o, detected, rungs, _verify, recompute_fn)
 
 
@@ -424,14 +465,18 @@ def protected_conv(
 ) -> Tuple[jnp.ndarray, T.FaultReport]:
     """Protected conv (paper Eq. 1): D[N,Ch,H,H] (x) W[M,Ch,R,R] + bias.
 
-    `o` lets tests inject into a precomputed output; `wck` carries the
-    precomputed (C_w1, C_w2).
+    `o` lets tests inject into a precomputed output and must be the
+    *complete* output (bias already included, matching
+    protect_matmul_output's convention - adding bias here again would
+    shift every element and turn any injection into a whole-tensor
+    fault); `wck` carries the precomputed (C_w1, C_w2).
     """
     conv = lambda: C.conv2d(d, w, stride=stride, padding=padding, groups=groups)
     if o is None:
         o = conv()
-    if bias is not None:
-        o = (o.astype(F32) + bias[None, :, None, None].astype(F32)).astype(o.dtype)
+        if bias is not None:
+            o = (o.astype(F32)
+                 + bias[None, :, None, None].astype(F32)).astype(o.dtype)
     if cfg is None or not cfg.enabled:
         return o, T.FaultReport.clean()
 
@@ -483,12 +528,9 @@ def protected_conv(
     tau5 = TH.tau_scalar(ss0.sumsq * jnp.ones(()), k_eq, o.dtype,
                          cfg.tau_factor, absd)
     tau5v = jnp.broadcast_to(tau5, (p,))
-    detected = jnp.any(TH.mismatch(cs0.c5, ss0.s5, tau5v))
-    if cfg.detect_weighted:
-        detected |= jnp.any(TH.mismatch(cs0.c6, ss0.s6,
-                                        TH.tau_weighted(tau5v, n_)))
-        detected |= jnp.any(TH.mismatch(cs0.c7, ss0.s7,
-                                        TH.tau_weighted(tau5v, m_)))
+    detected = _detect_invariants(cs0.c5, cs0.c6, cs0.c7,
+                                  ss0.s5, ss0.s6, ss0.s7, tau5v, n_, m_,
+                                  cfg.detect_weighted)
 
     def _norm(o):
         return o.reshape(n_, m_, p)
@@ -508,17 +550,7 @@ def protected_conv(
         t5 = TH.tau_scalar(ssv.sumsq * jnp.ones(()), k_eq, oo.dtype,
                            cfg.tau_factor, absd)
         t5 = jnp.broadcast_to(t5, (p,))
-        ok = ~jnp.any(TH.mismatch(csf.c5, ssv.s5, t5))
-        ok &= ~jnp.any(TH.mismatch(csf.c6, ssv.s6, TH.tau_weighted(t5, n_)))
-        ok &= ~jnp.any(TH.mismatch(csf.c7, ssv.s7, TH.tau_weighted(t5, m_)))
-        # row/column invariants: reject single-point miscorrections whose
-        # weighted-mean locator collided with an integer (see the matmul
-        # _verify; the campaign's differential oracle found the scalar
-        # checks alone insufficient for multi-element bursts).
-        trc = VERIFY_ROWCOL_SLACK * t5[None, :]
-        ok &= ~jnp.any(TH.mismatch(csf.c1, ssv.s1, trc / max(m_, 1) ** 0.5))
-        ok &= ~jnp.any(TH.mismatch(csf.c2, ssv.s2, trc / max(n_, 1) ** 0.5))
-        return ok
+        return _verify_invariants(csf, ssv, t5, t5[None, :], n_, m_)
 
     def _run_scheme(fn, oo, tau_kind):
         o3 = _norm(oo)
@@ -527,29 +559,11 @@ def protected_conv(
         t5 = TH.tau_scalar(ss.sumsq * jnp.ones(()), k_eq, oo.dtype,
                            cfg.tau_factor, absd)
         t5v = jnp.broadcast_to(t5, (p,))
-        if tau_kind == "scalar":
-            taus = (t5v,)
-        elif tau_kind == "col":   # per-(m,p) residues sum over n_ elements
-            taus = (t5v[None, :] / max(m_, 1) ** 0.5,)
-        elif tau_kind == "row":   # per-(n,p) residues sum over m_ elements
-            taus = (t5v[None, :] / max(n_, 1) ** 0.5,)
-        else:
-            taus = (t5v[None, :] / max(m_, 1) ** 0.5,
-                    t5v[None, :] / max(n_, 1) ** 0.5)
+        taus = _scheme_taus(tau_kind, t5v, t5v[None, :], n_, m_)
         fixed, ok = fn(o3, cs, ss, *taus)
         return _denorm(fixed), ok
 
-    rungs = [
-        (T.CHECKSUM_REFRESH, lambda oo: (oo, jnp.array(True))),
-        (T.COC, lambda oo: _run_scheme(S.coc_correct, oo, "scalar")),
-    ]
-    if cfg.rc_enabled:
-        rungs.append((T.RC, lambda oo: _run_scheme(S.rc_correct, oo, "col")))
-    if cfg.clc_enabled:
-        rungs.append((T.CLC, lambda oo: _run_scheme(S.clc_correct, oo, "row")))
-    if cfg.fc_enabled:
-        rungs.append((T.FC, lambda oo: _run_scheme(S.fc_correct, oo, "fc")))
-
+    rungs = _ladder_rungs(cfg, _run_scheme)
     return run_ladder(o, detected, rungs, _verify, recompute_fn)
 
 

@@ -7,9 +7,11 @@ recompute is the last resort.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+from typing import Dict, Iterable, Mapping, NamedTuple, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 # corrected_by enum (kept as plain ints so they live inside jit).
 NONE = 0          # no fault detected
@@ -50,11 +52,113 @@ class FaultReport(NamedTuple):
 def scheme_histogram(corrected_by) -> dict:
     """Host-side histogram of a batched `corrected_by` field: scheme name ->
     count. The campaign engine and benchmarks aggregate per-trial
-    FaultReports through this single definition so their tables agree."""
-    import numpy as np
+    FaultReports through this single definition so their tables agree.
+    Every scheme appears (zero counts included) so campaign/bench tables
+    keep a stable column set across runs."""
     arr = np.asarray(corrected_by).reshape(-1)
     return {name: int((arr == val).sum())
-            for val, name in SCHEME_NAMES.items() if (arr == val).any()}
+            for val, name in SCHEME_NAMES.items()}
+
+
+@jax.tree_util.register_pytree_node_class
+class ModelReport:
+    """Per-layer fault verdicts of one model pass, as a pytree.
+
+    Layer names are static metadata (they live in the treedef), the
+    per-layer FaultReports are the leaves - so a ModelReport crosses jit
+    boundaries, and `report.by_layer["conv3"]` works on concrete results.
+    The merged-scalar view (`detected` / `corrected_by` / `residual`)
+    matches the old single-FaultReport contract, so call sites that only
+    want the model-level verdict keep working unchanged.
+    """
+
+    def __init__(self, by_layer: Optional[Mapping[str, FaultReport]] = None):
+        self.by_layer: Dict[str, FaultReport] = dict(by_layer or {})
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        keys = tuple(self.by_layer)
+        return tuple(self.by_layer[k] for k in keys), keys
+
+    @classmethod
+    def tree_unflatten(cls, keys, children):
+        return cls(dict(zip(keys, children)))
+
+    # -- construction ------------------------------------------------------
+    def add(self, name: str, rep: "FaultReport | ModelReport") -> "ModelReport":
+        """Functional append of one layer's verdict (sub-reports flatten in
+        as 'name/sub')."""
+        out = dict(self.by_layer)
+        if isinstance(rep, ModelReport):
+            for sub, r in rep.by_layer.items():
+                out[f"{name}/{sub}"] = r
+        else:
+            out[name] = rep
+        return ModelReport(out)
+
+    def merge(self, other: "ModelReport") -> "ModelReport":
+        """Union of layers; shared names merge elementwise."""
+        out = dict(self.by_layer)
+        for name, r in other.by_layer.items():
+            out[name] = FaultReport.merge(out[name], r) if name in out else r
+        return ModelReport(out)
+
+    # -- views -------------------------------------------------------------
+    def __getitem__(self, name: str) -> FaultReport:
+        return self.by_layer[name]
+
+    def __len__(self) -> int:
+        return len(self.by_layer)
+
+    def layers(self) -> Tuple[str, ...]:
+        return tuple(self.by_layer)
+
+    def merged(self) -> FaultReport:
+        """Model-level FaultReport (max over layers, the old contract)."""
+        if not self.by_layer:
+            return FaultReport.clean()
+        reps = list(self.by_layer.values())
+        return FaultReport(
+            jnp.max(jnp.stack([r.detected for r in reps])),
+            jnp.max(jnp.stack([r.corrected_by for r in reps])),
+            jnp.max(jnp.stack([r.residual for r in reps])))
+
+    @property
+    def detected(self) -> jnp.ndarray:
+        return self.merged().detected
+
+    @property
+    def corrected_by(self) -> jnp.ndarray:
+        return self.merged().corrected_by
+
+    @property
+    def residual(self) -> jnp.ndarray:
+        return self.merged().residual
+
+    def scheme_histogram(self) -> dict:
+        """Stable-column histogram of per-layer corrected_by values."""
+        if not self.by_layer:
+            return scheme_histogram(np.zeros((0,), np.int32))
+        return scheme_histogram(
+            np.concatenate([np.asarray(r.corrected_by).reshape(-1)
+                            for r in self.by_layer.values()]))
+
+    def summary(self) -> dict:
+        """Host-side {layer: {detected, corrected_by, residual}} table."""
+        return {name: {"detected": int(np.max(np.asarray(r.detected))),
+                       "corrected_by": SCHEME_NAMES[
+                           int(np.max(np.asarray(r.corrected_by)))],
+                       "residual": int(np.max(np.asarray(r.residual)))}
+                for name, r in self.by_layer.items()}
+
+    def __repr__(self) -> str:
+        return f"ModelReport({list(self.by_layer)})"
+
+
+def as_fault_report(rep) -> FaultReport:
+    """Normalise FaultReport | ModelReport to the scalar FaultReport view
+    (what scan carries and step verdicts consume)."""
+    return rep.merged() if isinstance(rep, ModelReport) else rep
 
 
 @dataclasses.dataclass(frozen=True)

@@ -6,7 +6,7 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import FaultReport, ProtectConfig
+from repro.core import ModelReport, ProtectConfig
 from .linear import apply_dense, init_dense
 from .norms import activate
 
@@ -22,10 +22,9 @@ def init_ffn(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Dict:
 
 
 def apply_ffn(params: Dict, x: jnp.ndarray, abft: ProtectConfig,
-              act: str = "silu") -> Tuple[jnp.ndarray, FaultReport]:
+              act: str = "silu") -> Tuple[jnp.ndarray, ModelReport]:
     g, r1 = apply_dense(params["gate"], x, abft)
     u, r2 = apply_dense(params["up"], x, abft)
     h = activate(g, act) * u
     y, r3 = apply_dense(params["down"], h, abft)
-    rep = FaultReport.merge(FaultReport.merge(r1, r2), r3)
-    return y, rep
+    return y, ModelReport({"gate": r1, "up": r2, "down": r3})

@@ -24,10 +24,19 @@ def init_dense(key: jax.Array, d_in: int, d_out: int, *, bias: bool = False,
 
 def apply_dense(params, x: jnp.ndarray,
                 cfg: Optional[ProtectConfig] = DEFAULT_CONFIG,
-                wck=None) -> Tuple[jnp.ndarray, FaultReport]:
-    """y = x @ W (+ b), protected when cfg.enabled. x: (..., d_in)."""
+                wck=None, entry=None) -> Tuple[jnp.ndarray, FaultReport]:
+    """y = x @ W (+ b), protected when cfg.enabled. x: (..., d_in).
+
+    `entry` is a core.plan.PlanEntry: the call routes through the unified
+    protect_op (offline policy config + precomputed weight checksums,
+    staleness-checked at trace time), ignoring cfg/wck."""
     w = params["w"]
     b = params.get("b")
+    if entry is not None:
+        from repro.core import protect_op
+        inputs = (x, w) if b is None else (x, w, b)
+        y, rep = protect_op(entry.op, inputs, entry=entry)
+        return y.astype(x.dtype), rep
     if cfg is None or not cfg.enabled:
         y = jnp.einsum("...k,km->...m", x, w.astype(x.dtype))
         if b is not None:

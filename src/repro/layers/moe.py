@@ -102,6 +102,6 @@ def apply_moe(params: Dict, x: jnp.ndarray, cfg,
         from .ffn import apply_ffn
         ys, rs = apply_ffn(params["shared"], xt, abft, cfg.act)
         out = out + ys.astype(F32)
-        rep = FaultReport.merge(rep, rs)
+        rep = FaultReport.merge(rep, rs.merged())
 
     return out.astype(x.dtype).reshape(b, s, d), rep, aux

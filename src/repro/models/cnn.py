@@ -15,9 +15,9 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import (DEFAULT_CONFIG, FaultReport, ProtectConfig,
-                        protected_conv)
-from repro.core.policy import OpShape, decide_rc_clc
+from repro.core import (DEFAULT_CONFIG, ModelReport, ProtectConfig,
+                        ProtectionPlan, build_plan, conv_entry, matmul_entry,
+                        protect_op)
 
 F32 = jnp.float32
 
@@ -63,13 +63,18 @@ def vgg19(scale: float = 1.0) -> CNNConfig:
 
 def resnet18(scale: float = 1.0) -> CNNConfig:
     spec: List[ConvSpec] = [ConvSpec(64, 7, 2, 3, pool=2)]
-    idx = 0
     for stage_i, ch in enumerate((64, 128, 256, 512)):
         for block in range(2):
             stride = 2 if (stage_i > 0 and block == 0) else 1
             spec.append(ConvSpec(ch, 3, stride, 1))
+            # identity shortcut only where it is shape-valid: downsampling
+            # blocks (stride 2 halves spatial, doubles channels) would need
+            # a projection shortcut, which this plain-conv stack does not
+            # model - forward_cnn rejects mismatched shortcuts at trace
+            # time, so don't declare them here
             spec.append(ConvSpec(ch, 3, 1, 1,
-                                 residual_from=len(spec) - 2))
+                                 residual_from=len(spec) - 2
+                                 if stride == 1 else -1))
     return CNNConfig("resnet18", tuple(spec), width_scale=scale)
 
 
@@ -113,19 +118,11 @@ def init_cnn(key, cfg: CNNConfig, dtype=jnp.float32) -> Dict:
 
 
 def layer_policies(cfg: CNNConfig, batch: int) -> List[ProtectConfig]:
-    """Per-layer RC/ClC enablement from the paper's SS4.3 cost model."""
-    out: List[ProtectConfig] = []
-    img = cfg.img
-    ch = cfg.in_ch
-    for spec in cfg.convs:
-        e = (img + 2 * spec.pad - spec.kernel) // spec.stride + 1
-        shape = OpShape(n=batch, m=cfg.scaled(spec.out_ch), ch=ch,
-                        r=spec.kernel, h=e)
-        rc, clc = decide_rc_clc(shape)
-        out.append(DEFAULT_CONFIG.replace(rc_enabled=rc, clc_enabled=clc))
-        img = e // spec.pool if spec.pool else e
-        ch = cfg.scaled(spec.out_ch)
-    return out
+    """Deprecated shim: per-layer RC/ClC policy now lives in
+    `repro.core.build_plan` (which also precomputes weight checksums).
+    This returns only the conv configs of a policy-only plan."""
+    plan = build_plan(None, cfg, batch=batch)
+    return [plan[f"conv{i}"].cfg for i in range(len(cfg.convs))]
 
 
 def _maxpool(x: jnp.ndarray, k: int) -> jnp.ndarray:
@@ -135,35 +132,56 @@ def _maxpool(x: jnp.ndarray, k: int) -> jnp.ndarray:
 
 def forward_cnn(params: Dict, x: jnp.ndarray, cfg: CNNConfig,
                 policies: Optional[Sequence[ProtectConfig]] = None,
-                inject_layer: int = -1, inject_o=None
-                ) -> Tuple[jnp.ndarray, FaultReport]:
-    """x: (N, C, H, W) -> (logits, merged report).
+                inject_layer: int = -1, inject_o=None, *,
+                plan: Optional[ProtectionPlan] = None,
+                ) -> Tuple[jnp.ndarray, ModelReport]:
+    """x: (N, C, H, W) -> (logits, per-layer ModelReport).
 
-    inject_layer/inject_o: test hook - replaces layer i's conv output with a
-    corrupted tensor before protection (the paper's per-layer injection)."""
-    rep = FaultReport.clean()
+    `plan` is the offline-compiled ProtectionPlan (build_plan): per-layer
+    policy + precomputed weight checksums, and protection of the final fc
+    GEMM. Without a plan, each conv re-derives its weight checksums per
+    call under `policies[i]` (legacy shim) or the all-default config.
+    inject_layer/inject_o: test hook - replaces layer i's conv output with
+    a corrupted tensor before protection (the paper's per-layer injection).
+    """
+    rep = ModelReport()
     feats = []
     for i, spec in enumerate(cfg.convs):
-        pcfg = (policies[i] if policies is not None else
-                (DEFAULT_CONFIG if cfg.abft else
-                 DEFAULT_CONFIG.replace(enabled=False)))
-        pad = [(spec.pad, spec.pad)] * 2
+        name = f"conv{i}"
+        entry = plan[name] if plan is not None else conv_entry(
+            name, cfg=(policies[i] if policies is not None else
+                       (DEFAULT_CONFIG if cfg.abft else
+                        DEFAULT_CONFIG.replace(enabled=False))),
+            stride=spec.stride, pad=spec.pad)
         o = inject_o if i == inject_layer else None
-        y, r = protected_conv(x, params[f"conv{i}"]["w"],
-                              bias=params[f"conv{i}"]["b"],
-                              stride=spec.stride, padding=pad, cfg=pcfg, o=o)
-        rep = FaultReport.merge(rep, r)
+        y, r = protect_op(entry.op,
+                          (x, params[name]["w"], params[name]["b"]),
+                          entry=entry, o=o)
+        rep = rep.add(name, r)
         if spec.residual_from >= 0:
             short = feats[spec.residual_from]
-            if short.shape == y.shape:
-                y = y + short
+            if short.shape != y.shape:
+                raise ValueError(
+                    f"forward_cnn: conv layer {i} declares a residual "
+                    f"shortcut from layer {spec.residual_from}, but the "
+                    f"shortcut shape {tuple(short.shape)} does not match "
+                    f"the conv output shape {tuple(y.shape)}; identity "
+                    "shortcuts require equal shapes (use a projection or "
+                    "drop residual_from)")
+            y = y + short
         y = jax.nn.relu(y)
         if spec.pool:
             y = _maxpool(y, spec.pool)
         feats.append(y)
         x = y
     x = jnp.mean(x, axis=(2, 3))                     # global average pool
-    logits = x @ params["fc"]["w"] + params["fc"]["b"]
+    if plan is not None and "fc" in plan:
+        logits, r = protect_op(plan["fc"].op,
+                               (x, params["fc"]["w"], params["fc"]["b"]),
+                               entry=plan["fc"])
+        rep = rep.add("fc", r)
+    else:
+        logits = x @ params["fc"]["w"] + params["fc"]["b"]
     return logits, rep
 
 

@@ -11,7 +11,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import FaultReport, ProtectConfig
+from repro.core import FaultReport, ProtectConfig, as_fault_report
 from repro.layers.attention import apply_attention, init_attention, init_cache
 from repro.layers.embedding import embed, init_embedding, logits_head
 from repro.layers.ffn import apply_ffn, init_ffn
@@ -147,7 +147,9 @@ def _apply_block(kind: str, bp: Dict, x, cfg, abft, positions,
         raise ValueError(kind)
     if cfg.use_post_norm:
         y = rms_norm(y, bp["post_norm"], cfg.norm_eps)
-    return x + y.astype(x.dtype), rep, new_cache, aux
+    # blocks may return per-op ModelReports (e.g. ffn); the scan carry
+    # needs the fixed-structure scalar view
+    return x + y.astype(x.dtype), as_fault_report(rep), new_cache, aux
 
 
 def _apply_blocks(pattern, blocks, x, cfg, abft, positions, caches=None,

@@ -316,4 +316,9 @@ def test_cli_rejects_unknown_cells():
 
 def test_scheme_histogram_helper():
     by = jnp.array([core.RC, core.RC, core.COC, core.NONE])
-    assert core.scheme_histogram(by) == {"none": 1, "coc": 1, "rc": 2}
+    hist = core.scheme_histogram(by)
+    # stable column set: every scheme appears, zero-count entries included
+    assert set(hist) == set(core.SCHEME_NAMES.values())
+    assert {k: v for k, v in hist.items() if v} == \
+        {"none": 1, "coc": 1, "rc": 2}
+    assert hist["fc"] == 0 and hist["recompute"] == 0

@@ -134,10 +134,13 @@ def test_conv_bias_and_stride():
     o, rep = core.protected_conv(d, w, bias=b, stride=2)
     assert int(rep.detected) == 0
     np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), rtol=1e-5)
-    # injected: corrected
+    # injected: corrected by a checksum scheme (a caller-supplied o is the
+    # complete bias-included output - bias must not be re-added, or the
+    # whole tensor shifts and the ladder degrades to recompute)
     o_bad = o_ref.at[1, 2, 1, 1].add(500.0)
     fixed, rep = core.protected_conv(d, w, bias=b, stride=2, o=o_bad)
     assert int(rep.detected) == 1 and int(rep.residual) == 0
+    assert int(rep.corrected_by) < core.RECOMPUTE
     np.testing.assert_allclose(np.asarray(fixed), np.asarray(o_ref),
                                atol=1e-2)
 
