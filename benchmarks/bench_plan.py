@@ -1,19 +1,21 @@
 """ProtectionPlan benchmark: error-free overhead with the offline-encoded
 plan (weight checksums reused across calls) vs the per-call-encode
-baseline (checksums re-derived from W inside every protected op, the
-pre-plan API shape). The paper's Table 4 accounting excludes the
-kernel-checksum encode from the online cost because it is precalculated;
-this bench measures that gap and writes ``BENCH_plan.json`` so CI can
-track it.
+baseline, plus a per-layer breakdown of where the protected path spends
+its time (encode / detect / ladder). The paper's Table 4 accounting
+excludes the kernel-checksum encode from the online cost because it is
+precalculated, and its SS6 overhead claim is 4-8%; this bench measures
+both and writes ``BENCH_plan.json`` so CI can track the trajectory.
 
 The gate cell is a decode-style GEMM (small N, large K*M): there the
 encode is a full extra pass over W against a weight-bound op, so the gap
-sits far above CPU timing noise. The CNN model rows are informational -
-at the reduced CPU scales the conv encode is a sub-percent effect that
-scheduling jitter swamps.
+sits far above CPU timing noise. The CNN model rows carry the tracked
+``overhead_reused_pct`` per model; CI additionally compares them against
+the committed baseline (REPRO_BENCH_PLAN_BASELINE) with generous slack
+for shared-runner jitter.
 
     PYTHONPATH=src python -m benchmarks.run --only plan
     REPRO_BENCH_PLAN_JSON=/tmp/p.json ... (override the artifact path)
+    REPRO_BENCH_PLAN_BASELINE=baseline.json (enable the regression gate)
 """
 from __future__ import annotations
 
@@ -29,7 +31,7 @@ from repro.core import ProtectionPlan, build_plan, matmul_entry, protect_op
 from repro.models import cnn
 from .common import row
 
-SCHEMA = "repro.bench_plan/v1"
+SCHEMA = "repro.bench_plan/v2"
 SCALE = 0.12
 IMG = 64
 BATCH = 8
@@ -39,6 +41,17 @@ GATE_N, GATE_K, GATE_M = 8, 1024, 4096
 # CI slack on the gate cell: the two programs differ only by the encode
 # pass, so shared-runner jitter must not flip an otherwise-healthy gap
 GATE_SLACK = 1.05
+# regression gate on the per-model overhead: model-level CPU timings on
+# shared runners jitter hard, so only gross regressions (the kind a
+# reintroduced multi-pass detect path causes) should trip it. The gate
+# is a 2-of-N ensemble over the cells (both models + the compute-bound
+# trajectory cell): a seed-style multi-pass revert lands alexnet at
+# ~160% (limit ~106) and the trajectory cell at ~60-90% (limit ~52), so
+# at least two cells fail; a single cell riding a jitter excursion past
+# its limit is reported but does not turn the build red.
+REGRESSION_SLACK = 1.4      # multiplicative, on the baseline pct
+REGRESSION_MARGIN = 5.0     # + absolute percentage points
+REGRESSION_MIN_FAILS = 2    # cells that must regress before pass=False
 
 
 def _time_min(fn, *args, warmup: int = 2, iters: int = 10) -> float:
@@ -54,13 +67,26 @@ def _time_min(fn, *args, warmup: int = 2, iters: int = 10) -> float:
     return best
 
 
-def _interleaved(f_a, f_b, *args, rounds: int = 3):
-    """Min-of-min over alternating rounds so machine drift hits both."""
-    t_a = t_b = float("inf")
+def _interleaved(*fns, args=(), rounds: int = 40, iters: int = 1):
+    """Min over tightly alternating single calls.
+
+    This runner's clock toggles performance states on a ~seconds
+    timescale, so coarse per-program rounds can sample one program
+    entirely in a slow phase and its competitor in a fast one - the seed
+    artifact's resnet18 "34%" overhead was exactly that artifact.
+    Alternating call-by-call keeps every program's samples spread across
+    the same phases; min-of-mins then compares like with like."""
+    for f in fns:
+        for _ in range(2):
+            jax.block_until_ready(f(*args))
+    best = [float("inf")] * len(fns)
     for _ in range(rounds):
-        t_a = min(t_a, _time_min(f_a, *args))
-        t_b = min(t_b, _time_min(f_b, *args))
-    return t_a, t_b
+        for i, f in enumerate(fns):
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(f(*args))
+                best[i] = min(best[i], time.perf_counter() - t0)
+    return best
 
 
 def _strip_checksums(plan: ProtectionPlan) -> ProtectionPlan:
@@ -84,7 +110,7 @@ def _gate_cell():
         lambda d, w: protect_op(entry.op, (d, w), entry=entry)[0])
     f_percall = jax.jit(
         lambda d, w: protect_op(entry.op, (d, w), entry=stripped)[0])
-    t_reused, t_percall = _interleaved(f_reused, f_percall, d, w)
+    t_reused, t_percall = _interleaved(f_reused, f_percall, args=(d, w))
     return {
         "op": f"matmul d[{GATE_N},{GATE_K}] @ w[{GATE_K},{GATE_M}]",
         "reused_us": t_reused * 1e6,
@@ -96,11 +122,139 @@ def _gate_cell():
     }
 
 
+def _layer_breakdown(cfg, params, plan: ProtectionPlan, x) -> dict:
+    """Per-layer cost split on the layer's real operand shapes:
+
+    * plain  - the unprotected op
+    * detect - CoC-D serving mode (op + encode + one fused detection pass)
+    * full   - detection + the in-graph correction ladder (lax.cond)
+
+    encode_us times the input-checksum encode + fused checksum conv alone
+    (the part the offline plan cannot amortise); ladder_us is what merely
+    *carrying* the correction branch costs the error-free path.
+    """
+    from repro.core import checksums as C
+    out = {}
+    for i, spec in enumerate(cfg.convs):
+        name = f"conv{i}"
+        entry = plan[name]
+        w, b = params[name]["w"], params[name]["b"]
+        pad = entry.op.padding
+        stride = entry.op.stride
+
+        # NOTE: every variant returns its full (out, report) pytree - a
+        # `[0]` here would let jit dead-code-eliminate the entire
+        # detection computation in the detect-only variant and the
+        # breakdown would compare against thin air
+        f_plain = jax.jit(lambda d, w, b: C.conv2d(
+            d, w, stride=stride, padding=pad)
+            + b[None, :, None, None])
+        f_detect = jax.jit(lambda d, w, b: protect_op(
+            entry.op, (d, w, b), entry=entry,
+            cfg=entry.cfg.replace(detect_only=True)))
+        f_full = jax.jit(lambda d, w, b: protect_op(
+            entry.op, (d, w, b), entry=entry))
+
+        def f_encode(d, w):
+            cd1, cd2 = C.encode_d_conv(d)
+            cw1, cw2 = entry.wck if entry.wck is not None \
+                else C.encode_w_conv(w)
+            return C.detect_checksums_conv(cd1, cd2, cw1, cw2,
+                                           stride=stride, padding=pad)
+        f_encode = jax.jit(f_encode)
+
+        # encode rides the same interleave so its column is phase-
+        # comparable with the others (f_encode takes (x, w) only, so
+        # wrap to the shared arg tuple)
+        t_plain, t_detect, t_full, t_encode = _interleaved(
+            f_plain, f_detect, f_full,
+            lambda d, w, b: f_encode(d, w), args=(x, w, b), rounds=25)
+        out[name] = {
+            "plain_us": t_plain * 1e6,
+            "detect_us": t_detect * 1e6,
+            "full_us": t_full * 1e6,
+            "encode_us": t_encode * 1e6,
+            "detect_overhead_pct": (t_detect - t_plain) / t_plain * 100,
+            "ladder_us": (t_full - t_detect) * 1e6,
+        }
+        y = jax.nn.relu(f_plain(x, w, b))
+        if spec.pool:
+            y = cnn._maxpool(y, spec.pool)
+        x = y
+    return out
+
+
+def _trajectory_cell():
+    """Compute-bound measurement point: AlexNet at 4x the gate width and
+    2x the image. At the reduced CPU scales above, the per-op dispatch
+    floor (~0.1-0.5ms per XLA op on this class of runner) dominates the
+    ratio; here the convs are large enough to amortise it, so the
+    overhead tracks the algorithm's O(|O|)-work cost - the regime the
+    paper's 4-8% claim lives in. This is the tracked trajectory number.
+    """
+    scale, img, batch = 0.5, 128, 8
+    cfg = cnn.CNN_REGISTRY["alexnet"](scale)
+    cfg = cfg.__class__(**{**cfg.__dict__, "img": img})
+    params = cnn.init_cnn(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, 3, img, img),
+                          jnp.float32)
+    plan = build_plan(params, cfg, batch=batch)
+    off = cfg.__class__(**{**cfg.__dict__, "abft": False})
+    f_plain = jax.jit(lambda p, x: cnn.forward_cnn(p, x, off)[0])
+    f_reused = jax.jit(lambda p, x: cnn.forward_cnn(p, x, cfg, plan=plan)[0])
+    t_plain, t_reused = _interleaved(f_plain, f_reused, args=(params, x),
+                                     rounds=12)
+    return {
+        "op": f"alexnet scale={scale} img={img} batch={batch}",
+        "plain_us": t_plain * 1e6,
+        "reused_us": t_reused * 1e6,
+        "overhead_reused_pct": (t_reused - t_plain) / t_plain * 100,
+    }
+
+
+def _regression(results: dict, baseline_path: str | None,
+                trajectory: dict | None = None) -> dict:
+    """Compare each cell's overhead_reused_pct (per model + the
+    compute-bound trajectory cell) against the committed baseline
+    artifact (absent baseline = informational pass)."""
+    doc = {"baseline": baseline_path, "pass": True, "models": {}}
+    if not baseline_path or not os.path.exists(baseline_path):
+        return doc
+    with open(baseline_path) as f:
+        base = json.load(f)
+    cells = dict(results)
+    if trajectory is not None and "trajectory" in base:
+        cells["trajectory"] = trajectory
+        base = dict(base)
+        base.setdefault("models", {})["trajectory"] = base["trajectory"]
+    fails = 0
+    for name, res in cells.items():
+        b = base.get("models", {}).get(name)
+        if b is None:
+            continue
+        limit = b["overhead_reused_pct"] * REGRESSION_SLACK + \
+            REGRESSION_MARGIN
+        ok = res["overhead_reused_pct"] <= limit
+        fails += 0 if ok else 1
+        doc["models"][name] = {
+            "baseline_pct": b["overhead_reused_pct"],
+            "measured_pct": res["overhead_reused_pct"],
+            "limit_pct": limit,
+            "pass": bool(ok),
+        }
+    doc["failed_cells"] = fails
+    doc["pass"] = bool(fails < REGRESSION_MIN_FAILS)
+    return doc
+
+
 def run(models=MODELS, out_path: str | None = None):
     print("# plan: error-free overhead, offline-encoded plan vs "
           "per-call checksum encode")
     out_path = out_path or os.environ.get("REPRO_BENCH_PLAN_JSON",
                                           "BENCH_plan.json")
+    baseline_path = os.environ.get(
+        "REPRO_BENCH_PLAN_BASELINE",
+        os.path.join(os.path.dirname(__file__), "bench_plan_baseline.json"))
     rows = []
 
     gate = _gate_cell()
@@ -116,7 +270,8 @@ def run(models=MODELS, out_path: str | None = None):
         params = cnn.init_cnn(jax.random.PRNGKey(0), cfg)
         x = jax.random.normal(jax.random.PRNGKey(1),
                               (BATCH, 3, IMG, IMG), jnp.float32)
-        plan = build_plan(params, cfg, batch=BATCH)
+        # the offline phase, including the profile-guided kernel choice
+        plan = build_plan(params, cfg, batch=BATCH, profile_kernels=True)
         percall = _strip_checksums(plan)
         off = cfg.__class__(**{**cfg.__dict__, "abft": False})
 
@@ -126,34 +281,50 @@ def run(models=MODELS, out_path: str | None = None):
         f_percall = jax.jit(
             lambda p, x: cnn.forward_cnn(p, x, cfg, plan=percall)[0])
 
-        t_plain = _time_min(f_plain, params, x)
-        t_reused, t_percall = _interleaved(f_reused, f_percall, params, x)
+        t_plain, t_reused, t_percall = _interleaved(
+            f_plain, f_reused, f_percall, args=(params, x))
         results[name] = {
             "plain_us": t_plain * 1e6,
             "reused_us": t_reused * 1e6,
             "percall_us": t_percall * 1e6,
             "overhead_reused_pct": (t_reused - t_plain) / t_plain * 100,
             "overhead_percall_pct": (t_percall - t_plain) / t_plain * 100,
+            "layers": _layer_breakdown(cfg, params, plan, x),
+            "fused_layers": sum(
+                1 for e in plan.entries.values()
+                if e.cfg.use_fused_kernel),
         }
         rows.append(row(
             f"plan/{name}", t_reused * 1e6,
             f"percall_us={t_percall*1e6:.0f};plain_us={t_plain*1e6:.0f}"))
 
+    trajectory = _trajectory_cell()
+    rows.append(row("plan/trajectory_large", trajectory["reused_us"],
+                    f"plain_us={trajectory['plain_us']:.0f}"))
+
+    regression = _regression(results, baseline_path, trajectory=trajectory)
     doc = {
         "schema": SCHEMA,
         "meta": {"scale": SCALE, "img": IMG, "batch": BATCH,
-                 "jax_version": jax.__version__},
+                 "jax_version": jax.__version__,
+                 "paper_target_pct": [4, 8]},
         "gate": gate,
+        "trajectory": trajectory,
         "models": results,
         # the acceptance claim, measured where the encode is above the
         # noise floor: reusing the offline encode is not slower
         "reused_le_percall": gate["reused_le_percall"],
         "gate_pass": gate["gate_pass"],
+        "regression": regression,
     }
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
     print(f"# wrote {out_path} (gate: reused {gate['reused_us']:.0f}us vs "
           f"per-call {gate['percall_us']:.0f}us)")
+    for name, res in results.items():
+        print(f"#   {name}: plain {res['plain_us']:.0f}us, protected "
+              f"{res['reused_us']:.0f}us "
+              f"(overhead {res['overhead_reused_pct']:.0f}%)")
     return rows
 
 

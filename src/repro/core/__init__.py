@@ -13,7 +13,8 @@ from .plan import (OpSpec, PlanEntry, PlanStaleError, ProtectionPlan,
                    matmul_entry, protect_op)
 from .types import (CHECKSUM_REFRESH, CLC, COC, DEFAULT_CONFIG, FC, NONE, RC,
                     RECOMPUTE, SCHEME_NAMES, FaultReport, ModelReport,
-                    ProtectConfig, as_fault_report, scheme_histogram)
+                    ProtectConfig, as_fault_report, default_kernel_interpret,
+                    scheme_histogram)
 
 __all__ = [
     "checksums", "injection", "plan", "policy", "schemes", "thresholds",
@@ -26,5 +27,6 @@ __all__ = [
     "conv_entry", "grouped_matmul_entry", "matmul_entry", "protect_op",
     "CHECKSUM_REFRESH", "CLC", "COC", "DEFAULT_CONFIG", "FC", "NONE", "RC",
     "RECOMPUTE", "SCHEME_NAMES", "FaultReport", "ModelReport",
-    "ProtectConfig", "as_fault_report", "scheme_histogram",
+    "ProtectConfig", "as_fault_report", "default_kernel_interpret",
+    "scheme_histogram",
 ]

@@ -35,7 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import checksums as C
-from .policy import CostModel, OpShape, decide_rc_clc
+from .policy import (CostModel, OpShape, decide_rc_clc,
+                     profile_conv_detect_kernel, profile_matmul_kernel)
 from .protected import (WeightChecksums, protect_matmul_output,
                         protected_conv, protected_grouped_matmul,
                         protected_matmul, weight_checksums_matmul)
@@ -357,7 +358,8 @@ def _fingerprint(entry: PlanEntry, w) -> None:
 
 
 def build_plan(params, arch_cfg, cost_model: Optional[CostModel] = None,
-               batch: int = 8) -> ProtectionPlan:
+               batch: int = 8, profile_kernels: bool = False
+               ) -> ProtectionPlan:
     """Compile a model-level protection plan (the offline phase).
 
     Walks `arch_cfg` (a models.cnn.CNNConfig-shaped object: `.convs`,
@@ -366,6 +368,13 @@ def build_plan(params, arch_cfg, cost_model: Optional[CostModel] = None,
     layer's weight checksums keyed by param-tree path. `params=None`
     builds a policy-only plan (no checksums; the legacy layer_policies
     shim uses this).
+
+    `profile_kernels=True` runs the measured calibration pass
+    (policy.profile_*_kernel): per layer shape it times the plain XLA op
+    + fused jnp detection against the Pallas fused-epilogue route and pins
+    the winner (`use_fused_kernel` + `kernel_tiles`) into the entry's
+    config - the profile-guided step the arithmetic-intensity ABFT work
+    argues for. The timings land in `meta["kernel_profile"]`.
     """
     if not hasattr(arch_cfg, "convs"):
         raise TypeError("build_plan expects a CNN architecture config with "
@@ -373,6 +382,7 @@ def build_plan(params, arch_cfg, cost_model: Optional[CostModel] = None,
     base = (DEFAULT_CONFIG if getattr(arch_cfg, "abft", True)
             else DEFAULT_CONFIG.replace(enabled=False))
     entries: Dict[str, PlanEntry] = {}
+    kprof: Dict[str, dict] = {}
     img, ch = arch_cfg.img, arch_cfg.in_ch
     for i, spec in enumerate(arch_cfg.convs):
         e = (img + 2 * spec.pad - spec.kernel) // spec.stride + 1
@@ -381,6 +391,11 @@ def build_plan(params, arch_cfg, cost_model: Optional[CostModel] = None,
         rc, clc = decide_rc_clc(shape, cost_model)
         cfg = base.replace(rc_enabled=rc, clc_enabled=clc)
         name = f"conv{i}"
+        if profile_kernels and cfg.enabled:
+            prof = profile_conv_detect_kernel((batch, out, e, e))
+            cfg = cfg.replace(use_fused_kernel=prof.use_fused,
+                              kernel_tiles=prof.tiles)
+            kprof[name] = prof.doc()
         w = params[name]["w"] if params is not None else None
         entries[name] = conv_entry(name, w, cfg, stride=spec.stride,
                                    pad=spec.pad)
@@ -389,10 +404,20 @@ def build_plan(params, arch_cfg, cost_model: Optional[CostModel] = None,
         ch = out
     if params is None or "fc" in params:
         w = params["fc"]["w"] if params is not None else None
-        entries["fc"] = matmul_entry("fc", w, base)
+        fc_cfg = base
+        if profile_kernels and base.enabled:
+            classes = (w.shape[1] if w is not None
+                       else getattr(arch_cfg, "num_classes", 1000))
+            prof = profile_matmul_kernel(batch, ch, classes)
+            fc_cfg = base.replace(use_fused_kernel=prof.use_fused,
+                                  kernel_tiles=prof.tiles)
+            kprof["fc"] = prof.doc()
+        entries["fc"] = matmul_entry("fc", w, fc_cfg)
         _fingerprint(entries["fc"], w)
     model = cost_model or CostModel()
     meta = {"arch": getattr(arch_cfg, "name", "?"), "batch": batch,
             "cost_model": {"alpha": model.alpha, "beta": model.beta},
             "img": arch_cfg.img, "in_ch": arch_cfg.in_ch}
+    if profile_kernels:
+        meta["kernel_profile"] = kprof
     return ProtectionPlan(entries=entries, meta=meta)

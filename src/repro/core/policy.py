@@ -87,6 +87,125 @@ def decide_rc_clc(s: OpShape, model: Optional[CostModel] = None
     return rc, clc
 
 
+# --------------------------------------------------------------------------
+# profile-guided kernel selection (the measured sibling of calibrate():
+# instead of fitting the analytic alpha/beta model, time the actual
+# plain-vs-fused programs per layer shape and pin the winner in the plan)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelProfile:
+    """One layer's measured plain-vs-fused decision."""
+    use_fused: bool
+    tiles: Optional[Tuple[int, int, int]]  # (bm, bn, bk) when fused
+    t_plain: float                         # seconds (min over iters)
+    t_fused: float                         # inf when the kernel is not viable
+
+    def doc(self) -> dict:
+        return {"use_fused": self.use_fused,
+                "tiles": list(self.tiles) if self.tiles else None,
+                "plain_us": self.t_plain * 1e6,
+                "fused_us": (self.t_fused * 1e6
+                             if self.t_fused != float("inf") else None)}
+
+
+def _time_call(fn, *args, iters: int = 3, warmup: int = 2) -> float:
+    import time
+
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+_MATMUL_TILE_CANDIDATES = ((256, 256, 256), (128, 128, 256), (512, 512, 256))
+
+
+def profile_matmul_kernel(n: int, k: int, m: int, dtype=None,
+                          interpret: Optional[bool] = None,
+                          candidates=_MATMUL_TILE_CANDIDATES,
+                          iters: int = 3) -> KernelProfile:
+    """Time plain XLA dot + detection sums vs the fused Pallas epilogue on
+    a (n,k)@(k,m) GEMM; returns the winner and its tile sizes. On
+    non-TPU backends the kernel runs in interpret mode, which this
+    measurement correctly prices (it will essentially never win there)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.types import default_kernel_interpret
+    from repro.kernels import ops as kops
+    if interpret is None:
+        interpret = default_kernel_interpret()
+    dtype = dtype or jnp.float32
+    key = jax.random.PRNGKey(n * 131 + m)
+    d = jax.random.normal(key, (n, k), jnp.float32).astype(dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, m),
+                          jnp.float32).astype(dtype)
+
+    def plain(d, w):
+        # what the unfused protected path actually pays: the dot plus the
+        # detection-sums pass over O (the fused kernel folds that pass
+        # into its epilogue, so it must be priced on the plain side too)
+        o = jnp.dot(d, w, preferred_element_type=jnp.float32)
+        wn = jnp.arange(n, dtype=jnp.float32)
+        wm = jnp.arange(m, dtype=jnp.float32)
+        s5 = jnp.sum(o)
+        s6 = jnp.dot(wn, jnp.sum(o, axis=1))
+        s7 = jnp.dot(jnp.sum(o, axis=0), wm)
+        return o, s5, s6, s7, jnp.sum(o * o)
+
+    f_plain = jax.jit(plain)
+    t_plain = _time_call(f_plain, d, w, iters=iters)
+    # interpret mode (non-TPU) never wins: one timing call prices it
+    k_iters, k_warm = (1, 1) if interpret else (iters, 2)
+    t_fused, best_tiles = float("inf"), None
+    for tiles in candidates:
+        bm, bn, bk = tiles
+        f = jax.jit(lambda d, w, bm=bm, bn=bn, bk=bk: kops.abft_matmul(
+            d, w, interpret=interpret, bm=bm, bn=bn, bk=bk)[0])
+        t = _time_call(f, d, w, iters=k_iters, warmup=k_warm)
+        if t < t_fused:
+            t_fused, best_tiles = t, tiles
+        if interpret and t > 10 * t_plain:
+            break  # hopeless; don't pay for more interpret candidates
+    use = t_fused < t_plain
+    return KernelProfile(use, best_tiles if use else None, t_plain, t_fused)
+
+
+def profile_conv_detect_kernel(o_shape: Tuple[int, int, int, int],
+                               interpret: Optional[bool] = None,
+                               iters: int = 3) -> KernelProfile:
+    """Time the fused jnp detection-sums pass vs the Pallas single-pass
+    reduction on a conv output of `o_shape` (N, M, E, E)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import checksums as C
+    from repro.core.types import default_kernel_interpret
+    from repro.kernels import ops as kops
+    if interpret is None:
+        interpret = default_kernel_interpret()
+    o = jax.random.normal(jax.random.PRNGKey(sum(o_shape)), o_shape,
+                          jnp.float32)
+    if kops.conv_detect_sums(o, interpret=interpret) is None:
+        # degenerate flattened view: the kernel route cannot run at all
+        return KernelProfile(False, None,
+                             _time_call(jax.jit(C.detect_sums), o,
+                                        iters=iters), float("inf"))
+    f_plain = jax.jit(C.detect_sums)
+    f_fused = jax.jit(lambda o: kops.conv_detect_sums(o,
+                                                      interpret=interpret))
+    t_plain = _time_call(f_plain, o, iters=iters)
+    k_iters, k_warm = (1, 1) if interpret else (iters, 2)
+    t_fused = _time_call(f_fused, o, iters=k_iters, warmup=k_warm)
+    return KernelProfile(t_fused < t_plain, None, t_plain, t_fused)
+
+
 def calibrate(samples) -> CostModel:
     """Least-squares fit of (alpha, beta) from measured (shape, scheme,
     seconds) samples - the offline-profiling hook used by benchmarks."""

@@ -191,13 +191,39 @@ class ProtectConfig:
     # the step (runtime.ft). Production serving mode: the rarely-taken
     # correction branches never enter the compiled program.
     detect_only: bool = False
-    # Use the Pallas fused-epilogue kernel for O + summations.
+    # Use the Pallas fused-epilogue kernel for O + summations. Set per
+    # layer by build_plan's profile-guided calibration (policy.profile_*).
     use_fused_kernel: bool = False
-    # Interpret mode for the Pallas kernel (CPU validation).
-    kernel_interpret: bool = True
+    # Interpret mode for the Pallas kernel. None = auto: compile on TPU,
+    # interpret everywhere else (the kernels are TPU-shaped; interpreting
+    # them on CPU is for validation, not speed). True/False overrides.
+    kernel_interpret: Optional[bool] = None
+    # Pallas tile sizes (bm, bn, bk) pinned by the profile-guided plan;
+    # None = the kernels' shape-derived defaults.
+    kernel_tiles: Optional[Tuple[int, int, int]] = None
+
+    def __post_init__(self):
+        # JSON round-trips tuples as lists; normalise so the config stays
+        # hashable (it is a jit static argument)
+        if isinstance(self.kernel_tiles, list):
+            object.__setattr__(self, "kernel_tiles", tuple(self.kernel_tiles))
 
     def replace(self, **kw) -> "ProtectConfig":
         return dataclasses.replace(self, **kw)
+
+    def resolve_interpret(self) -> bool:
+        """Concrete interpret flag: explicit override, else backend auto."""
+        if self.kernel_interpret is not None:
+            return self.kernel_interpret
+        return default_kernel_interpret()
+
+
+def default_kernel_interpret() -> bool:
+    """Interpret Pallas kernels everywhere but TPU (where they compile)."""
+    try:
+        return jax.default_backend() != "tpu"
+    except Exception:  # pragma: no cover - backend probing never raises today
+        return True
 
 
 DEFAULT_CONFIG = ProtectConfig()

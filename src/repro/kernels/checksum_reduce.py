@@ -4,8 +4,18 @@ The conv/attention outputs of the paper's workflow need S_o sums even when
 the producing op is not our fused GEMM (XLA conv, attention, an external
 library - "any convolution implementation"). This kernel reads O exactly
 once from HBM and emits the same partials as the fused epilogue
-(colsum/rowsum/sumsq), replacing the multiple beta-passes of the paper's
-encode step.
+(colsum/rowsum/sumsq) plus a locally-index-weighted column sum (wcolsum),
+replacing the multiple beta-passes of the paper's encode step.
+
+wcolsum weights each row by its index *within the tile*; combined with the
+tile's base row index it reconstructs any affine row weighting exactly:
+
+    sum_r w(r) * O[r, :]  =  w(base) * colsum_tile + step * wcolsum_tile
+
+for w(r) = w(base) + step * (r - base). That is what lets the conv detect
+path recover both the n-weighted (s6) and m-weighted (s7) invariants from
+the flattened (N*M, E*E) view without a second pass (kernels.ops
+.conv_detect_sums).
 """
 from __future__ import annotations
 
@@ -24,17 +34,21 @@ except ImportError:  # pragma: no cover
 F32 = jnp.float32
 
 
-def _kernel(o_ref, colsum_ref, rowsum_ref, sumsq_ref):
+def _kernel(o_ref, colsum_ref, rowsum_ref, sumsq_ref, wcolsum_ref):
     tile = o_ref[...].astype(F32)
     colsum_ref[...] = jnp.sum(tile, axis=0, keepdims=True)
     rowsum_ref[...] = jnp.sum(tile, axis=1, keepdims=True)
     sumsq_ref[...] = jnp.sum(tile * tile).reshape(1, 1)
+    # local row-index weights (2D iota: TPU requires >=2D)
+    w = jax.lax.broadcasted_iota(F32, tile.shape, 0)
+    wcolsum_ref[...] = jnp.sum(w * tile, axis=0, keepdims=True)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
 def checksum_reduce(o: jnp.ndarray, *, bm: int = 512, bn: int = 512,
                     interpret: bool = True) -> Tuple:
-    """Returns (colsum (N/bm, M), rowsum (N, M/bn), sumsq (N/bm, M/bn))."""
+    """Returns (colsum (N/bm, M), rowsum (N, M/bn), sumsq (N/bm, M/bn),
+    wcolsum (N/bm, M), bm, bn)."""
     n, m = o.shape
     bm, bn = min(bm, n), min(bn, m)
     assert n % bm == 0 and m % bn == 0, (o.shape, bm, bn)
@@ -45,7 +59,7 @@ def checksum_reduce(o: jnp.ndarray, *, bm: int = 512, bn: int = 512,
             pltpu, "TPUCompilerParams")
         kwargs["compiler_params"] = params(
             dimension_semantics=("parallel", "parallel"))
-    colsum, rowsum, sumsq = pl.pallas_call(
+    colsum, rowsum, sumsq, wcolsum = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
@@ -53,13 +67,15 @@ def checksum_reduce(o: jnp.ndarray, *, bm: int = 512, bn: int = 512,
             pl.BlockSpec((1, bn), lambda i, j: (i, j)),
             pl.BlockSpec((bm, 1), lambda i, j: (i, j)),
             pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (i, j)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((n // bm, m), F32),
             jax.ShapeDtypeStruct((n, m // bn), F32),
             jax.ShapeDtypeStruct((n // bm, m // bn), F32),
+            jax.ShapeDtypeStruct((n // bm, m), F32),
         ],
         interpret=interpret,
         **kwargs,
     )(o)
-    return colsum, rowsum, sumsq, bm, bn
+    return colsum, rowsum, sumsq, wcolsum, bm, bn

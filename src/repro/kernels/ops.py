@@ -1,5 +1,12 @@
 """Jit'd wrappers around the Pallas kernels, with shape-aligned dispatch and
-the partial->chunk-sum plumbing used by repro.core.protected."""
+the partial->chunk-sum plumbing used by repro.core.protected.
+
+Shapes that do not divide the requested tiles no longer drop to the jnp
+oracle wholesale: operands are zero-padded to tile multiples (zero rows /
+columns / K-slices contribute nothing to the product or to any of the
+summation partials) and the outputs sliced back, so real workloads with
+edge tiles still run the fused kernels.
+"""
 from __future__ import annotations
 
 import functools
@@ -23,45 +30,101 @@ def _tile(n: int, target: int) -> int:
     return t
 
 
+def _tile_pad(n: int, target: int) -> Optional[int]:
+    """Largest power-of-two tile <= target (>= 8) whose zero-padding waste
+    on an n-sized axis stays under 25%; None when even the smallest tile
+    wastes more (degenerate axis - not worth a kernel)."""
+    best = None
+    c = 8
+    while c <= target:
+        pad = (-n) % c
+        if pad == 0 or pad * 4 <= n:
+            best = c
+        c *= 2
+    return best
+
+
+def _ceil_to(n: int, t: int) -> int:
+    return -(-n // t) * t
+
+
 def abft_matmul(d: jnp.ndarray, w: jnp.ndarray, *, interpret: bool = True,
                 bm: int = 256, bn: int = 256, bk: int = 256,
                 out_dtype=None) -> Tuple[jnp.ndarray, Tuple]:
-    """Fused GEMM + checksum epilogue; falls back to the jnp oracle when the
-    shapes do not tile (the ABFT algebra is implementation-agnostic, so the
-    fallback is bit-compatible with the protection layer)."""
+    """Fused GEMM + checksum epilogue. Non-tile-aligned shapes run on
+    zero-padded operands with the result (and partials) sliced back; only
+    degenerate axes (where padding would waste >25%) fall back to the jnp
+    oracle (the ABFT algebra is implementation-agnostic, so the fallback
+    is bit-compatible with the protection layer)."""
     n, k = d.shape
     m = w.shape[1]
     bm_, bn_, bk_ = _tile(n, bm), _tile(m, bn), _tile(k, bk)
-    if min(bm_, bn_, bk_) < 8:  # degenerate tiling: not worth a kernel
+    if min(bm_, bn_, bk_) >= 8:
+        return _abft_matmul_kernel(d, w, bm=bm_, bn=bn_, bk=bk_,
+                                   interpret=interpret, out_dtype=out_dtype)
+    pm = bm_ if bm_ >= 8 else _tile_pad(n, bm)
+    pn = bn_ if bn_ >= 8 else _tile_pad(m, bn)
+    pk = bk_ if bk_ >= 8 else _tile_pad(k, bk)
+    if pm is None or pn is None or pk is None:
         return _ref.abft_matmul_ref(d, w, bm_, bn_, out_dtype)
-    return _abft_matmul_kernel(d, w, bm=bm_, bn=bn_, bk=bk_,
-                               interpret=interpret, out_dtype=out_dtype)
+    dp = jnp.pad(d, ((0, _ceil_to(n, pm) - n), (0, _ceil_to(k, pk) - k)))
+    wp = jnp.pad(w, ((0, _ceil_to(k, pk) - k), (0, _ceil_to(m, pn) - m)))
+    o, (colsum, rowsum, sumsq, _, _) = _abft_matmul_kernel(
+        dp, wp, bm=pm, bn=pn, bk=pk, interpret=interpret,
+        out_dtype=out_dtype)
+    # pad rows/cols of O are exactly zero, so sliced partials stay exact;
+    # colsum keeps tile-resolution rows (ceil(n/pm)) - consumers detect
+    # the row misalignment and recombine from O
+    return o[:n, :m], (colsum[:, :m], rowsum[:n, :], sumsq, pm, pn)
 
 
 def checksum_reduce(o: jnp.ndarray, *, interpret: bool = True,
                     bm: int = 512, bn: int = 512) -> Tuple:
+    """Single-pass summation partials of O[N,M]:
+    (colsum, rowsum, sumsq, wcolsum, bm, bn). Unaligned shapes are
+    zero-padded into the kernel and the partials sliced back."""
     n, m = o.shape
     bm_, bn_ = _tile(n, bm), _tile(m, bn)
-    if min(bm_, bn_) < 8:
+    if min(bm_, bn_) >= 8:
+        return _checksum_reduce_kernel(o, bm=bm_, bn=bn_,
+                                       interpret=interpret)
+    pm = bm_ if bm_ >= 8 else _tile_pad(n, bm)
+    pn = bn_ if bn_ >= 8 else _tile_pad(m, bn)
+    if pm is None or pn is None:
         return (*_ref.checksum_reduce_ref(o, bm_, bn_), bm_, bn_)
-    return _checksum_reduce_kernel(o, bm=bm_, bn=bn_, interpret=interpret)
+    op = jnp.pad(o, ((0, _ceil_to(n, pm) - n), (0, _ceil_to(m, pn) - m)))
+    colsum, rowsum, sumsq, wcolsum, _, _ = _checksum_reduce_kernel(
+        op, bm=pm, bn=pn, interpret=interpret)
+    return colsum[:, :m], rowsum[:n, :], sumsq, wcolsum[:, :m], pm, pn
 
 
-def chunk_sums_from_partials(parts, rb: int, cb: int):
-    """Finish the kernel partials into per-chunk (s5, s6, s7, sumsq).
+def chunk_sums_from_partials(parts, rb: int, cb: int, o=None):
+    """Finish the fused-epilogue partials into per-chunk (s5, s6, s7,
+    sumsq).
 
     colsum has full column resolution -> exact local-index m-weighting for
     s7; rowsum has full row resolution -> exact n-weighting for s6. Cost is
     O(N*M/bn + M*N/bm), negligible next to the GEMM.
+
+    When the chunk is not a multiple of the kernel tile (or the partials
+    came from a padded edge-tile run), the tile partials cannot be split at
+    chunk boundaries - recombine at element resolution from `o` instead
+    (one extra fused pass; only exotic chunk/tile pairings pay it). With
+    no `o` to recombine from, misalignment is still an error.
     """
     colsum, rowsum, sumsq, bm, bn = parts
     nt, m = colsum.shape
     n = rowsum.shape[0]
-    if rb % bm != 0 or cb % bn != 0:
-        # chunk not tile-aligned: recombine at element resolution (rare;
-        # happens only for exotic chunk configs)
-        raise ValueError(f"chunk ({rb},{cb}) must be a multiple of the "
-                         f"kernel tile ({bm},{bn})")
+    aligned = (rb % bm == 0 and cb % bn == 0
+               and nt * bm == n and rowsum.shape[1] * bn == m
+               and n % rb == 0 and m % cb == 0)
+    if not aligned:
+        if o is None:
+            raise ValueError(
+                f"chunk ({rb},{cb}) must be a multiple of the kernel tile "
+                f"({bm},{bn}) to recombine from partials; pass o= to "
+                "recombine at element resolution")
+        return _ref.chunk_sums_ref(o, rb, cb)
     nb, mb = n // rb, m // cb
     cs = colsum.reshape(nb, rb // bm, mb, cb)
     rs = rowsum.reshape(nb, rb, mb, cb // bn)
@@ -70,3 +133,40 @@ def chunk_sums_from_partials(parts, rb: int, cb: int):
     s6 = jnp.einsum("arbt,r->ab", rs, jnp.arange(rb, dtype=F32))
     sq = sumsq.reshape(nb, rb // bm, mb, cb // bn).sum(axis=(1, 3))
     return s5, s6, s7, sq
+
+
+def conv_detect_sums(o4: jnp.ndarray, *, interpret: bool = True,
+                     tiles: Optional[Tuple[int, int]] = None):
+    """Pallas route for `repro.core.checksums.detect_sums`: one kernel pass
+    over the flattened (N*M, E*E) view of O[N,M,E,E], finished to the
+    per-payload detection sums (s5, s6, s7, sumsq).
+
+    Row tiles must not straddle batch-block boundaries (each flattened row
+    nm has weights n = nm//M for s6 and m = nm%M for s7, and the kernel's
+    wcolsum partial carries only the *local* row weighting) - so M (padded
+    to a tile multiple with zero blocks, which contribute nothing) must be
+    divisible by the row tile. Returns None when the view is degenerate,
+    signalling the caller to take the fused jnp pass instead.
+    """
+    n, m, e1, e2 = o4.shape
+    p = e1 * e2
+    tm, tp = tiles or (256, 256)
+    bm = _tile(m, tm) if _tile(m, tm) >= 8 else _tile_pad(m, tm)
+    bn = _tile(p, tp) if _tile(p, tp) >= 8 else _tile_pad(p, tp)
+    if bm is None or bn is None:
+        return None
+    mp, pp = _ceil_to(m, bm), _ceil_to(p, bn)
+    o3 = o4.reshape(n, m, p)
+    if (mp, pp) != (m, p):
+        o3 = jnp.pad(o3, ((0, 0), (0, mp - m), (0, pp - p)))
+    colsum, _, sumsq, wcolsum, bm, bn = _checksum_reduce_kernel(
+        o3.reshape(n * mp, pp), bm=bm, bn=bn, interpret=interpret)
+    t = colsum.shape[0]                       # n * mp / bm row tiles
+    base = jnp.arange(t) * bm
+    nw = (base // mp).astype(F32)             # n, constant per tile
+    mbase = (base % mp).astype(F32)           # m of the tile's first row
+    s5 = jnp.sum(colsum, axis=0)
+    s6 = nw @ colsum
+    s7 = mbase @ colsum + jnp.sum(wcolsum, axis=0)
+    sq = jnp.sum(sumsq)
+    return s5[:p], s6[:p], s7[:p], sq

@@ -15,17 +15,19 @@ def abft_matmul_ref(d: jnp.ndarray, w: jnp.ndarray, bm: int, bn: int,
     out_dtype = out_dtype or d.dtype
     acc = jnp.dot(d.astype(F32), w.astype(F32), preferred_element_type=F32)
     o = acc.astype(out_dtype)
-    colsum, rowsum, sumsq = checksum_reduce_ref(acc, bm, bn)
+    colsum, rowsum, sumsq, _ = checksum_reduce_ref(acc, bm, bn)
     return o, (colsum, rowsum, sumsq, bm, bn)
 
 
 def checksum_reduce_ref(o: jnp.ndarray, bm: int, bn: int) -> Tuple:
     n, m = o.shape
     o32 = o.astype(F32)
-    colsum = o32.reshape(n // bm, bm, m).sum(axis=1)
+    tiled = o32.reshape(n // bm, bm, m)
+    colsum = tiled.sum(axis=1)
     rowsum = o32.reshape(n, m // bn, bn).sum(axis=2)
     sumsq = (o32 * o32).reshape(n // bm, bm, m // bn, bn).sum(axis=(1, 3))
-    return colsum, rowsum, sumsq
+    wcolsum = jnp.einsum("tbm,b->tm", tiled, jnp.arange(bm, dtype=F32))
+    return colsum, rowsum, sumsq, wcolsum
 
 
 def conv2d_ref(d: jnp.ndarray, w: jnp.ndarray, stride: int = 1,

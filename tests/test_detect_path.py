@@ -1,0 +1,278 @@
+"""Structural + differential guards for the single-pass detection hot path.
+
+The error-free cost model of this repo is: every protected op is the
+underlying op plus ONE fused O(|O|) detection pass. These tests pin that
+down two ways:
+
+* jaxpr structure - trace the error-free path and assert exactly one
+  large conv / dot_general sits outside the `lax.cond` correction branch,
+  and that none of the full-resolution s1-s4 / c1-c4 reductions leak out
+  of it (a reintroduced per-checksum conv or weighted full-size reduction
+  fails the op-count/shape assertions immediately);
+* differential parity - the lean detection sums and checksums must agree
+  with the full `output_sums_conv` / `output_checksums_conv` values
+  (bitwise on fp32 for the sums: same reduction order, same arithmetic),
+  and detection/correction verdicts through the new path must match a
+  seeded injection sweep.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import checksums as C
+from repro.core import types as T
+from repro.core.protected import protected_conv, protected_matmul
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# jaxpr walking helpers
+# --------------------------------------------------------------------------
+
+def _outer_eqns(jaxpr):
+    """Equations of `jaxpr` and of every inner jaxpr EXCEPT cond branches
+    (the correction ladder); pjit/closed_call bodies are inlined."""
+    eqns = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "cond":
+            continue
+        eqns.append(eqn)
+        for v in eqn.params.values():
+            for sub in jax.tree_util.tree_leaves(
+                    v, is_leaf=lambda x: isinstance(
+                        x, (jax.core.Jaxpr, jax.core.ClosedJaxpr))):
+                if isinstance(sub, jax.core.ClosedJaxpr):
+                    eqns.extend(_outer_eqns(sub.jaxpr))
+                elif isinstance(sub, jax.core.Jaxpr):
+                    eqns.extend(_outer_eqns(sub))
+    return eqns
+
+
+def _size(var) -> int:
+    sh = getattr(var.aval, "shape", ())
+    out = 1
+    for s in sh:
+        out *= s
+    return out
+
+
+def _dot_flops(eqn) -> int:
+    """Rough dot_general cost: output elements * contraction length."""
+    dims = eqn.params["dimension_numbers"][0][0]
+    k = 1
+    for ax in dims:
+        k *= eqn.invars[0].aval.shape[ax]
+    return _size(eqn.outvars[0]) * k
+
+
+# --------------------------------------------------------------------------
+# structure: the error-free path is op + one fused pass
+# --------------------------------------------------------------------------
+
+N, CH, H = 8, 6, 16
+M, R = 24, 3
+K_MM, M_MM = 96, 64
+
+
+def _conv_operands():
+    key = jax.random.PRNGKey(0)
+    d = jax.random.normal(key, (N, CH, H, H), F32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (M, CH, R, R), F32)
+    b = jax.random.normal(jax.random.fold_in(key, 2), (M,), F32)
+    return d, w, b
+
+
+def _matmul_operands():
+    key = jax.random.PRNGKey(1)
+    d = jax.random.normal(key, (N, K_MM), F32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K_MM, M_MM), F32)
+    return d, w
+
+
+@pytest.mark.parametrize("detect_only", [True, False])
+def test_conv_errorfree_path_structure(detect_only):
+    d, w, b = _conv_operands()
+    cfg = T.DEFAULT_CONFIG.replace(detect_only=detect_only)
+    jaxpr = jax.make_jaxpr(
+        lambda d, w, b: protected_conv(d, w, bias=b, cfg=cfg)[0])(d, w, b)
+    eqns = _outer_eqns(jaxpr.jaxpr)
+    convs = [e for e in eqns if e.primitive.name == "conv_general_dilated"]
+    # exactly the protected op itself + ONE fused checksum conv; the old
+    # path's separate c5/c6/c7/absdot convs (and the correction branch's
+    # c1-c4 convs) would push this to 5+
+    assert len(convs) == 2, [str(e) for e in convs]
+    o_elems = N * M * (H - R + 1) ** 2
+    # no s1-s4-style reductions in the detect path: every dot_general out
+    # here is an O(P)-sized finishing step, never a full-resolution
+    # (M,P)/(N,P) weighted summation
+    for e in eqns:
+        if e.primitive.name == "dot_general":
+            assert _size(e.outvars[0]) < o_elems / 2, str(e)
+
+
+@pytest.mark.parametrize("detect_only", [True, False])
+def test_matmul_errorfree_path_structure(detect_only):
+    d, w = _matmul_operands()
+    cfg = T.DEFAULT_CONFIG.replace(detect_only=detect_only)
+    jaxpr = jax.make_jaxpr(
+        lambda d, w: protected_matmul(d, w, cfg=cfg)[0])(d, w)
+    eqns = _outer_eqns(jaxpr.jaxpr)
+    assert not any(e.primitive.name == "conv_general_dilated" for e in eqns)
+    dots = [e for e in eqns if e.primitive.name == "dot_general"]
+    main_flops = N * K_MM * M_MM
+    heavy = [e for e in dots if _dot_flops(e) >= main_flops / 2]
+    # the GEMM itself is the only heavy contraction outside the ladder
+    # (c1-c4 GEMVs are K*M/N*K-sized and must stay inside the cond)
+    assert len(heavy) == 1, [str(e) for e in heavy]
+
+
+def test_conv_correction_stays_in_cond():
+    """The full config still traces the correction machinery - but only
+    inside the cond: the whole program contains the c1-c4 convs, the
+    outer slice does not."""
+    d, w, b = _conv_operands()
+    cfg = T.DEFAULT_CONFIG
+
+    def count_convs(jaxpr):
+        n = len([e for e in jaxpr.eqns
+                 if e.primitive.name == "conv_general_dilated"])
+        for eqn in jaxpr.eqns:
+            for v in eqn.params.values():
+                for sub in jax.tree_util.tree_leaves(
+                        v, is_leaf=lambda x: isinstance(
+                            x, (jax.core.Jaxpr, jax.core.ClosedJaxpr))):
+                    if isinstance(sub, jax.core.ClosedJaxpr):
+                        n += count_convs(sub.jaxpr)
+                    elif isinstance(sub, jax.core.Jaxpr):
+                        n += count_convs(sub)
+        return n
+
+    jaxpr = jax.make_jaxpr(
+        lambda d, w, b: protected_conv(d, w, bias=b, cfg=cfg)[0])(d, w, b)
+    total = count_convs(jaxpr.jaxpr)
+    outer = len([e for e in _outer_eqns(jaxpr.jaxpr)
+                 if e.primitive.name == "conv_general_dilated"])
+    assert outer == 2
+    assert total > outer  # ladder rungs really are traced, behind the cond
+
+
+# --------------------------------------------------------------------------
+# differential parity: lean detection == full encode, bitwise on fp32
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("oshape", [(8, 24, 7, 7), (4, 12, 15, 15),
+                                    (16, 8, 3, 3)])
+def test_detect_sums_bitwise_parity(oshape):
+    """Two parity contracts against the old full encode:
+
+    * exact_order=True reduces in output_sums_conv's order and must be
+      BITWISE identical on fp32 (same arithmetic, fewer outputs);
+    * the default GEMM formulation reassociates (BLAS) and must stay at
+      ulp level - far inside the detection thresholds.
+    """
+    o = jax.random.normal(jax.random.PRNGKey(oshape[1]), oshape, F32)
+    full = C.output_sums_conv(o)
+    staged = C.detect_sums(o, exact_order=True)
+    for a, b, name in zip(staged, (full.s5, full.s6, full.s7, full.sumsq),
+                          ("s5", "s6", "s7", "sq")):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"{name}: exact-order detect_sums must be bitwise "
+                    "equal to output_sums_conv on fp32")
+    for jit in (False, True):
+        fast = (jax.jit(C.detect_sums) if jit else C.detect_sums)(o)
+        for a, b, name in zip(fast, (full.s5, full.s6, full.s7, full.sumsq),
+                              ("s5", "s6", "s7", "sq")):
+            scale = float(np.max(np.abs(np.asarray(b)))) + 1.0
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), atol=1e-5 * scale,
+                err_msg=f"{name} (gemm formulation, jit={jit})")
+
+
+def test_detect_checksums_conv_parity():
+    d, w, _ = _conv_operands()
+    cd1, cd2 = C.encode_d_conv(d)
+    cw1, cw2 = C.encode_w_conv(w)
+    c5, c6, c7, absd = C.detect_checksums_conv(cd1, cd2, cw1, cw2)
+    full = C.output_checksums_conv(d, w, cd1, cd2, cw1, cw2,
+                                   need_rowcol=False)
+    scale = float(jnp.max(jnp.abs(full.c5))) + 1.0
+    for a, b, name in ((c5, full.c5, "c5"), (c6, full.c6, "c6"),
+                       (c7, full.c7, "c7")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5 * scale, err_msg=name)
+    np.testing.assert_allclose(float(absd), float(C.absdot_conv(cd1, cw1)),
+                               rtol=1e-6)
+
+
+def test_detection_correction_verdicts_unchanged():
+    """Seeded injection sweep through the new hot path: every burst is
+    detected and corrected, the clean arm stays silent (the statistical
+    version of this runs in test_campaign.py over the same protect_op
+    entry points)."""
+    d, w, b = _conv_operands()
+    o_clean = C.conv2d(d, w)
+    o_clean = (o_clean.astype(F32) + b[None, :, None, None]).astype(F32)
+    run = jax.jit(lambda d, w, b, o: protected_conv(d, w, bias=b, o=o))
+    out, rep = run(d, w, b, o_clean)
+    assert int(rep.detected) == 0 and int(rep.residual) == 0
+
+    e = o_clean.shape[2]
+    for seed in range(8):
+        key = jax.random.PRNGKey(100 + seed)
+        kn, km, kv = jax.random.split(key, 3)
+        i = int(jax.random.randint(kn, (), 0, N))
+        j = int(jax.random.randint(km, (), 0, M))
+        bad = o_clean.at[i, j].add(
+            jax.random.normal(kv, (e, e)) * 37.0 + 11.0)
+        out, rep = run(d, w, b, bad)
+        assert int(rep.detected) == 1, seed
+        assert int(rep.residual) == 0, seed
+        # scheme fixes restore to within eps * |corruption| (see
+        # VERIFY_ROWCOL_SLACK discussion in core/protected.py)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(o_clean),
+                                   atol=5e-2)
+
+
+def test_detect_only_conv_reports_without_correcting():
+    d, w, b = _conv_operands()
+    cfg = T.DEFAULT_CONFIG.replace(detect_only=True)
+    o_clean = C.conv2d(d, w)
+    o_clean = (o_clean.astype(F32) + b[None, :, None, None]).astype(F32)
+    bad = o_clean.at[0, 0, 0, 0].add(1e4)
+    out, rep = jax.jit(
+        lambda d, w, b, o: protected_conv(d, w, bias=b, cfg=cfg, o=o))(
+            d, w, b, bad)
+    assert int(rep.detected) == 1
+    assert int(rep.residual) == 1          # surfaced, not fixed
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(bad))
+
+
+def test_plan_pins_kernel_choice_and_roundtrips(tmp_path):
+    """kernel_tiles/use_fused_kernel decisions survive save/load and stay
+    hashable (jit-static)."""
+    cfg = T.DEFAULT_CONFIG.replace(use_fused_kernel=True,
+                                   kernel_tiles=(128, 128, 256))
+    entry = core.matmul_entry("fc", jnp.ones((32, 48), F32), cfg)
+    plan = core.ProtectionPlan(entries={"fc": entry})
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    loaded = core.ProtectionPlan.load(path)
+    lcfg = loaded["fc"].cfg
+    assert lcfg.use_fused_kernel is True
+    assert lcfg.kernel_tiles == (128, 128, 256)
+    assert isinstance(lcfg.kernel_tiles, tuple)
+    hash(lcfg)
+
+
+def test_kernel_interpret_auto_resolution():
+    cfg = T.DEFAULT_CONFIG
+    assert cfg.kernel_interpret is None
+    # explicit override wins; auto matches the backend rule
+    assert cfg.replace(kernel_interpret=False).resolve_interpret() is False
+    assert cfg.replace(kernel_interpret=True).resolve_interpret() is True
+    auto = cfg.resolve_interpret()
+    assert auto == (jax.default_backend() != "tpu")

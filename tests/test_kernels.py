@@ -38,11 +38,36 @@ def test_abft_matmul_vs_ref(shape, dtype):
 def test_checksum_reduce_vs_ref(shape, dtype):
     key = jax.random.PRNGKey(shape[0])
     o = jax.random.normal(key, shape, jnp.float32).astype(dtype)
-    colsum, rowsum, sumsq, bm, bn = ops.checksum_reduce(o, interpret=True)
-    cr, rr, sr = ref.checksum_reduce_ref(o, bm, bn)
+    colsum, rowsum, sumsq, wcolsum, bm, bn = ops.checksum_reduce(
+        o, interpret=True)
+    cr, rr, sr, wr = ref.checksum_reduce_ref(o, bm, bn)
     np.testing.assert_allclose(np.asarray(colsum), np.asarray(cr), rtol=1e-6)
     np.testing.assert_allclose(np.asarray(rowsum), np.asarray(rr), rtol=1e-6)
     np.testing.assert_allclose(np.asarray(sumsq), np.asarray(sr), rtol=1e-5)
+    # weights up to bm-1 amplify magnitudes (and reassociation noise)
+    wscale = float(np.max(np.abs(np.asarray(wr)))) + 1.0
+    np.testing.assert_allclose(np.asarray(wcolsum), np.asarray(wr),
+                               atol=1e-6 * wscale)
+
+
+@pytest.mark.parametrize("shape", [(37, 53), (100, 260), (96, 100)])
+def test_checksum_reduce_padded_edges(shape):
+    """Non-tile-aligned shapes run the kernel on zero-padded operands and
+    slice back - partials must match the element-resolution oracle."""
+    key = jax.random.PRNGKey(sum(shape))
+    o = jax.random.normal(key, shape, jnp.float32)
+    colsum, rowsum, sumsq, wcolsum, bm, bn = ops.checksum_reduce(
+        o, interpret=True)
+    n, m = shape
+    assert colsum.shape == (-(-n // bm), m)
+    assert rowsum.shape[0] == n
+    # totals are exact regardless of tiling
+    np.testing.assert_allclose(float(jnp.sum(colsum)), float(jnp.sum(o)),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(jnp.sum(rowsum)), float(jnp.sum(o)),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(jnp.sum(sumsq)), float(jnp.sum(o * o)),
+                               rtol=1e-5)
 
 
 @pytest.mark.parametrize("rb,cb", [(64, 64), (128, 256), (256, 128)])
@@ -76,10 +101,65 @@ def test_fused_protection_end_to_end():
 
 
 def test_unaligned_fallback():
-    """Odd shapes fall back to the oracle without changing semantics."""
+    """Odd shapes run via padded edge tiles (or the oracle when
+    degenerate) without changing semantics."""
     key = jax.random.PRNGKey(9)
     d = jax.random.normal(key, (37, 19))
     w = jax.random.normal(jax.random.fold_in(key, 1), (19, 53))
     o, parts = ops.abft_matmul(d, w, interpret=True)
     np.testing.assert_allclose(np.asarray(o), np.asarray(d @ w), rtol=1e-5,
                                atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(40, 24, 56), (100, 96, 136)])
+def test_abft_matmul_padded_edges(shape):
+    """Shapes whose axes don't divide the default tiles still run the
+    fused kernel via zero padding; O and the partial totals stay exact."""
+    n, k, m = shape
+    key = jax.random.PRNGKey(n + m)
+    d = jax.random.normal(key, (n, k))
+    w = jax.random.normal(jax.random.fold_in(key, 2), (k, m))
+    o, parts = ops.abft_matmul(d, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(d @ w), rtol=1e-5,
+                               atol=1e-4)
+    colsum, rowsum, sumsq = parts[0], parts[1], parts[2]
+    assert colsum.shape[1] == m and rowsum.shape[0] == n
+    np.testing.assert_allclose(float(jnp.sum(colsum)), float(jnp.sum(o)),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(jnp.sum(sumsq)),
+                               float(jnp.sum(jnp.square(d @ w))), rtol=1e-4)
+
+
+def test_chunk_sums_fallback_from_o():
+    """Chunks that are not tile multiples recombine from O at element
+    resolution instead of raising."""
+    key = jax.random.PRNGKey(3)
+    n, k, m = 96, 32, 160
+    d = jax.random.normal(key, (n, k))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, m))
+    o, parts = ops.abft_matmul(d, w, interpret=True, bm=32, bn=32)
+    # rb=48 is not a multiple of bm=32 -> needs the o= fallback
+    with pytest.raises(ValueError):
+        ops.chunk_sums_from_partials(parts, 48, 32)
+    s = ops.chunk_sums_from_partials(parts, 48, 32, o=o)
+    sref = ref.chunk_sums_ref(jnp.asarray(o, jnp.float32), 48, 32)
+    for a, b, name in zip(s, sref, ["s5", "s6", "s7", "sumsq"]):
+        scale = float(jnp.max(jnp.abs(b))) + 1.0
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4 * scale, err_msg=name)
+
+
+@pytest.mark.parametrize("oshape", [(8, 32, 8, 8), (4, 24, 15, 15)])
+def test_conv_detect_sums_vs_jnp(oshape):
+    """The Pallas route for the conv detection sums agrees with the fused
+    jnp pass (including M/P padding on the flattened view)."""
+    from repro.core import checksums as C
+    key = jax.random.PRNGKey(oshape[1])
+    o = jax.random.normal(key, oshape, jnp.float32)
+    got = ops.conv_detect_sums(o, interpret=True, tiles=(8, 64))
+    assert got is not None
+    want = C.detect_sums(o)
+    for a, b, name in zip(got, want, ["s5", "s6", "s7", "sumsq"]):
+        scale = float(jnp.max(jnp.abs(jnp.atleast_1d(b)))) + 1.0
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4 * scale, err_msg=name)
