@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import injection as inj
-from repro.core import conv_entry, matmul_entry, protect_op
+from repro.core import conv_entry, correct_op, matmul_entry, protect_op
 from repro.core import types as T
 from repro.kernels import ref
 
@@ -47,6 +47,10 @@ SCHEME_CONFIGS: Dict[str, T.ProtectConfig] = {
                                     fc_enabled=False),
     # detection-only (CoC-D, the serving mode): no in-graph correction
     "detect": T.DEFAULT_CONFIG.replace(detect_only=True),
+    # deferred correction: the op runs detect-only (DetectEvidence carry)
+    # and ONE cond invokes correct_op when flagged - the per-op twin of
+    # forward_cnn(..., correction="deferred"). Ladder config = full.
+    "deferred": T.DEFAULT_CONFIG,
 }
 
 
@@ -115,57 +119,104 @@ def _score(out, rep: T.FaultReport, o_ref) -> TrialOutcome:
                         (err <= TOL_REL * scale).astype(jnp.int32), err)
 
 
-def _switch_inject(models: List[inj.FaultModel], block_shape, max_elems: int):
-    """(key, model_id, O) -> corrupted O, dispatching plan and apply over
-    the registry with lax.switch so one compiled program serves every
-    fault arm. O may be the matmul or conv layout; the normalised-form
-    round-trip is inj.inject's."""
+def _switch_inject(models: List[inj.FaultModel], block_shape, max_elems: int,
+                   target: str = "output"):
+    """(key, model_id, X) -> corrupted X, dispatching plan+apply over the
+    registry with lax.switch so one compiled program serves every fault
+    arm. Models whose `target` differs are identity branches, so the same
+    switch structure serves the output-corruption stage (X = O, dims =
+    O's block form) and the post-encode weight-corruption stage (X = W,
+    dims = W's block form). X may be the matmul or conv layout; the
+    normalised-form round-trip is inj.inject's."""
     n, m, p = block_shape
 
-    def injectf(key, model_id, o):
-        spec = jax.lax.switch(
-            model_id,
-            [lambda k, fm=fm: fm.plan(k, n, m, p, max_elems)
-             for fm in models], key)
-        return jax.lax.switch(
-            model_id,
-            [lambda o_, s, fm=fm: inj.inject(o_, s, fm) for fm in models],
-            o, spec)
+    def injectf(key, model_id, x):
+        branches = []
+        for fm in models:
+            if fm.target == target:
+                branches.append(
+                    lambda k, x_, fm=fm: inj.inject(
+                        x_, fm.plan(k, n, m, p, max_elems), fm))
+            else:
+                branches.append(lambda k, x_: x_)
+        return jax.lax.switch(model_id, branches, key, x)
 
     return injectf
 
 
+def _deferred_protect(entry, d, w, o_bad):
+    """The per-op deferred workflow: detect-only pass, then ONE cond that
+    runs the full correction ladder only when the evidence flagged - the
+    campaign-grade twin of the model-level deferred forward. Verdicts and
+    corrected outputs must match the per-layer 'full' scheme bit for bit
+    (the cond branch is the per-layer computation)."""
+    out_d, ev = protect_op(entry.op, (d, w), entry=entry, o=o_bad,
+                           mode="detect_only")
+
+    def _correct(_):
+        # the branch trusts the carried flag; it is constant-true here
+        # (the outer cond already gated on it), so the ladder's own gate
+        # folds away instead of tracing a redundant nested cond
+        o_c, rep = correct_op(entry.op, (d, w), entry=entry, o=o_bad,
+                              detected=jnp.ones((), jnp.bool_))
+        return o_c, rep.corrected_by, rep.residual
+
+    def _skip(_):
+        z = jnp.zeros((), jnp.int32)
+        return out_d, z, z
+
+    out, by, resid = jax.lax.cond(ev.flag > 0, _correct, _skip, None)
+    return out, T.FaultReport(ev.flag, by, resid)
+
+
 def _matmul_trial(case: MatmulCase, cfg: T.ProtectConfig, max_elems: int,
-                  models: List[inj.FaultModel]):
-    injectf = _switch_inject(models, case.block_shape, max_elems)
+                  models: List[inj.FaultModel], deferred: bool = False):
+    inject_o = _switch_inject(models, case.block_shape, max_elems)
+    inject_w = _switch_inject(models, (case.k, case.m, 1), max_elems,
+                              target="weight")
 
     def trial(key, model_id):
         kd, kw, kf = jax.random.split(key, 3)
         d = jax.random.normal(kd, (case.n, case.k), F32)
         w = jax.random.normal(kw, (case.k, case.m), F32)
         o_ref, _ = ref.abft_matmul_ref(d, w, bm=case.n, bn=case.m)
-        o_bad = injectf(kf, model_id, o_ref)
         # the ProtectionPlan path: weight checksums encoded once per trial
-        # weight draw (the offline step), then handed to the unified op
+        # weight draw (the offline step), then handed to the unified op.
+        # Weight-target models corrupt W *after* this encode (stale-plan
+        # regime): the runtime output comes from the corrupted weights
+        # while the entry still carries the clean-plan checksums.
         entry = matmul_entry("cell", w, cfg)
-        out, rep = protect_op(entry.op, (d, w), entry=entry, o=o_bad)
+        w_run = inject_w(kf, model_id, w)
+        o_run, _ = ref.abft_matmul_ref(d, w_run, bm=case.n, bn=case.m)
+        o_bad = inject_o(kf, model_id, o_run)
+        if deferred:
+            out, rep = _deferred_protect(entry, d, w_run, o_bad)
+        else:
+            out, rep = protect_op(entry.op, (d, w_run), entry=entry, o=o_bad)
         return _score(out, rep, o_ref)
 
     return trial
 
 
 def _conv_trial(case: ConvCase, cfg: T.ProtectConfig, max_elems: int,
-                models: List[inj.FaultModel]):
-    injectf = _switch_inject(models, case.block_shape, max_elems)
+                models: List[inj.FaultModel], deferred: bool = False):
+    inject_o = _switch_inject(models, case.block_shape, max_elems)
+    inject_w = _switch_inject(models, (case.m, case.ch, case.r * case.r),
+                              max_elems, target="weight")
 
     def trial(key, model_id):
         kd, kw, kf = jax.random.split(key, 3)
         d = jax.random.normal(kd, (case.n, case.ch, case.h, case.h), F32)
         w = jax.random.normal(kw, (case.m, case.ch, case.r, case.r), F32)
         o_ref = ref.conv2d_ref(d, w, stride=case.stride)
-        o_bad = injectf(kf, model_id, o_ref)
         entry = conv_entry("cell", w, cfg, stride=case.stride)
-        out, rep = protect_op(entry.op, (d, w), entry=entry, o=o_bad)
+        w_run = inject_w(kf, model_id, w)
+        o_run = ref.conv2d_ref(d, w_run, stride=case.stride)
+        o_bad = inject_o(kf, model_id, o_run)
+        if deferred:
+            out, rep = _deferred_protect(entry, d, w_run, o_bad)
+        else:
+            out, rep = protect_op(entry.op, (d, w_run), entry=entry, o=o_bad)
         return _score(out, rep, o_ref)
 
     return trial
@@ -189,7 +240,8 @@ class CampaignEngine:
             case = self.cases[layer]
             cfg = SCHEME_CONFIGS[scheme]
             build = _matmul_trial if case.kind == "matmul" else _conv_trial
-            trial = build(case, cfg, self.max_elems, self._models)
+            trial = build(case, cfg, self.max_elems, self._models,
+                          deferred=scheme == "deferred")
             self._runners[cache_key] = jax.jit(
                 jax.vmap(trial, in_axes=(0, None)))
         return self._runners[cache_key]

@@ -45,7 +45,12 @@ def check(result: CampaignResult, min_correction: float = 0.99) -> list:
         if detectable and c.detection_rate < 1.0:
             bad.append(f"{name}: detection_rate={c.detection_rate:.4f} "
                        "(want 1.0)")
-        if c.scheme != "detect":
+        # correction gates only apply where in-graph correction is the
+        # contract: not in detect-only serving mode, and not for arms the
+        # ladder cannot fix by construction (weight_corrupt: the fix is
+        # reloading weights from the plan-trusted root, runtime.ft's job)
+        correctable = (not known) or inj.FAULT_MODELS[c.fault].correctable
+        if c.scheme != "detect" and correctable:
             if detectable and c.correction_rate < min_correction:
                 bad.append(f"{name}: correction_rate="
                            f"{c.correction_rate:.4f} "

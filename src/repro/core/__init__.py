@@ -9,12 +9,12 @@ from .protected import (WeightChecksums, abft_matmul_vjp, pick_chunk,
 from .injection import (CONTROL_MODEL, FAULT_MODELS, FaultModel, FaultSpec,
                         fault_model_names, register_fault_model)
 from .plan import (OpSpec, PlanEntry, PlanStaleError, ProtectionPlan,
-                   build_plan, conv_entry, grouped_matmul_entry,
-                   matmul_entry, protect_op)
+                   build_plan, conv_entry, correct_op, grouped_matmul_entry,
+                   matmul_entry, protect_op, weight_leaf)
 from .types import (CHECKSUM_REFRESH, CLC, COC, DEFAULT_CONFIG, FC, NONE, RC,
-                    RECOMPUTE, SCHEME_NAMES, FaultReport, ModelReport,
-                    ProtectConfig, as_fault_report, default_kernel_interpret,
-                    scheme_histogram)
+                    RECOMPUTE, SCHEME_NAMES, DetectEvidence, FaultReport,
+                    ModelReport, ProtectConfig, as_fault_report,
+                    default_kernel_interpret, scheme_histogram)
 
 __all__ = [
     "checksums", "injection", "plan", "policy", "schemes", "thresholds",
@@ -24,9 +24,10 @@ __all__ = [
     "CONTROL_MODEL", "FAULT_MODELS", "FaultModel", "FaultSpec",
     "fault_model_names", "register_fault_model",
     "OpSpec", "PlanEntry", "PlanStaleError", "ProtectionPlan", "build_plan",
-    "conv_entry", "grouped_matmul_entry", "matmul_entry", "protect_op",
+    "conv_entry", "correct_op", "grouped_matmul_entry", "matmul_entry",
+    "protect_op", "weight_leaf",
     "CHECKSUM_REFRESH", "CLC", "COC", "DEFAULT_CONFIG", "FC", "NONE", "RC",
-    "RECOMPUTE", "SCHEME_NAMES", "FaultReport", "ModelReport",
-    "ProtectConfig", "as_fault_report", "default_kernel_interpret",
-    "scheme_histogram",
+    "RECOMPUTE", "SCHEME_NAMES", "DetectEvidence", "FaultReport",
+    "ModelReport", "ProtectConfig", "as_fault_report",
+    "default_kernel_interpret", "scheme_histogram",
 ]

@@ -16,6 +16,9 @@ matmul, E*E for conv):
   scattered     unconstrained positions  multi-fault / recompute regime
   subthreshold  one element, tiny delta  negative control: provably below
                                          the thresholds.py detection floor
+  weight_corrupt  1..max elements of W   post-encode weight corruption
+                  (target="weight")      (stale-plan / RowHammer regime;
+                                         detectable, not correctable)
 
 Every model is a (plan, apply) pair built from jit/vmap-safe primitives:
 `plan` draws a `FaultSpec` (a fixed-shape pytree of arrays, so thousands of
@@ -74,6 +77,15 @@ class FaultModel(NamedTuple):
     detectable: bool        # should exceed the thresholds.py floor?
     plan: Callable[..., FaultSpec]           # (key, n, m, p, max_elems)
     apply: Callable[[jnp.ndarray, FaultSpec], jnp.ndarray]  # (o3, spec)
+    # what the spec corrupts: "output" models hit O after the op ran,
+    # "weight" models hit W *after* the plan encoded its checksums (the
+    # stale-plan / RowHammer regime - plan dims are then W's block dims)
+    target: str = "output"
+    # can the in-graph ladder restore the oracle output? Weight corruption
+    # cannot be fixed by output-side schemes or recompute (the paper
+    # reloads weights instead - runtime.ft's job), so its campaign cells
+    # gate on detection only.
+    correctable: bool = True
 
 
 FAULT_MODELS: Dict[str, FaultModel] = {}
@@ -81,15 +93,23 @@ CONTROL_MODEL = "none"   # the error-free arm every campaign carries
 
 
 def register_fault_model(name: str, detectable: bool = True,
-                         apply: Optional[Callable] = None):
+                         apply: Optional[Callable] = None,
+                         target: str = "output",
+                         correctable: Optional[bool] = None):
     """Decorator registering `plan_fn(key, n, m, p, max_elems) -> FaultSpec`
     under `name`. Ids are assigned in registration order and stay stable
-    within a process (campaigns embed them in compiled programs)."""
+    within a process (campaigns embed them in compiled programs).
+    `correctable` defaults to True for output models and False for weight
+    models (output-side schemes cannot restore corrupted weights)."""
+    if target not in ("output", "weight"):
+        raise ValueError(f"unknown fault target {target!r}")
     def deco(plan_fn):
         if name in FAULT_MODELS:
             raise ValueError(f"fault model {name!r} already registered")
         model = FaultModel(name, len(FAULT_MODELS), detectable,
-                           plan_fn, apply or apply_spec)
+                           plan_fn, apply or apply_spec, target,
+                           target == "output" if correctable is None
+                           else correctable)
         FAULT_MODELS[name] = model
         return plan_fn
     return deco
@@ -273,6 +293,23 @@ def plan_subthreshold(key, n, m, p, max_elems: int = 100) -> FaultSpec:
     off = jax.random.randint(key, (max_elems,), 0, n * m * p)
     return _spec(FAULT_MODELS["subthreshold"].model_id, 2, -1, 1,
                  1.0, SUBTHRESHOLD_REL, off)
+
+
+@register_fault_model("weight_corrupt", target="weight")
+def plan_weight_corrupt(key, n, m, p, max_elems: int = 100) -> FaultSpec:
+    """Post-encode weight corruption (the stale-plan / RowHammer regime):
+    1..max_elems elements of W flipped at unconstrained positions AFTER
+    the plan encoded its checksums. The n/m/p dims here are W's block
+    dims ((K, M, 1) for matmul, (M, Ch, R*R) for conv), not O's.
+    Detection must flag the plan-vs-weight divergence; correction is out
+    of scope for the in-graph ladder (runtime.ft reloads weights from
+    the plan-trusted root instead), hence `correctable=False`."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    span = n * m * p
+    hi = min(max_elems, span)
+    nelem = jax.random.randint(k1, (), 1, hi + 1)
+    return _spec(FAULT_MODELS["weight_corrupt"].model_id, 2, -1, nelem,
+                 _exponent_scale(k2), 1.0, _span_offsets(k3, span, max_elems))
 
 
 # --------------------------------------------------------------------------

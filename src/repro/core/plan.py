@@ -40,7 +40,8 @@ from .policy import (CostModel, OpShape, decide_rc_clc,
 from .protected import (WeightChecksums, protect_matmul_output,
                         protected_conv, protected_grouped_matmul,
                         protected_matmul, weight_checksums_matmul)
-from .types import DEFAULT_CONFIG, FaultReport, ProtectConfig
+from .types import (DEFAULT_CONFIG, DetectEvidence, FaultReport,
+                    ProtectConfig)
 
 PLAN_SCHEMA = "repro.plan/v1"
 
@@ -142,8 +143,12 @@ def grouped_matmul_entry(name: str, w=None,
 # the unified protected-op entry point
 # --------------------------------------------------------------------------
 
+PROTECT_MODES = (None, "detect_only", "correct")
+
+
 def protect_op(op: OpSpec, inputs, entry: Optional[PlanEntry] = None,
                cfg: Optional[ProtectConfig] = None, o=None,
+               mode: Optional[str] = None, detected=None,
                ) -> Tuple[jnp.ndarray, FaultReport]:
     """Run one protected op through the multischeme workflow.
 
@@ -152,7 +157,21 @@ def protect_op(op: OpSpec, inputs, entry: Optional[PlanEntry] = None,
     trace time); without an entry, `cfg` (default DEFAULT_CONFIG) applies
     and weight checksums are derived per call. `o` injects an
     already-computed output (tests / fused kernels / fault campaigns).
+
+    `mode` splits execution for the deferred-correction workflow:
+    * None - cfg-driven (the per-layer default: detection + in-graph
+      ladder, or CoC-D serving under cfg.detect_only);
+    * "detect_only" - run CoC-D only and return (raw_out,
+      DetectEvidence): the compact per-op flag/evidence carry; the
+      correction ladder is not even traced;
+    * "correct" - force the full s1-s4/row-col ladder even under a
+      detect_only config (use `correct_op`, the public spelling).
+    `detected` (correct mode) overrides the ladder's gate with an
+    externally carried flag.
     """
+    if mode not in PROTECT_MODES:
+        raise ValueError(f"unknown protect_op mode {mode!r} "
+                         f"(have {PROTECT_MODES})")
     d, w = inputs[0], inputs[1]
     bias = inputs[2] if len(inputs) > 2 else None
     if entry is not None:
@@ -172,14 +191,18 @@ def protect_op(op: OpSpec, inputs, entry: Optional[PlanEntry] = None,
     if op.kind == "matmul":
         if o is not None:
             if use_cfg is None or not use_cfg.enabled:
-                return o, FaultReport.clean()
+                return o, (DetectEvidence.clean() if mode == "detect_only"
+                           else FaultReport.clean())
             return protect_matmul_output(d, w, o, wck=wck, bias=bias,
-                                         cfg=use_cfg)
-        return protected_matmul(d, w, wck=wck, bias=bias, cfg=use_cfg)
+                                         cfg=use_cfg, mode=mode,
+                                         detected=detected)
+        return protected_matmul(d, w, wck=wck, bias=bias, cfg=use_cfg,
+                                mode=mode, detected=detected)
     if op.kind == "conv":
         return protected_conv(d, w, bias=bias, stride=op.stride,
                               padding=op.padding, groups=op.groups,
-                              wck=wck, cfg=use_cfg, o=o)
+                              wck=wck, cfg=use_cfg, o=o, mode=mode,
+                              detected=detected)
     if op.kind == "grouped_matmul":
         if o is not None or bias is not None:
             # silently dropping either would report clean verdicts on
@@ -187,17 +210,36 @@ def protect_op(op: OpSpec, inputs, entry: Optional[PlanEntry] = None,
             raise NotImplementedError(
                 "protect_op: grouped_matmul does not support `o` injection "
                 "or bias")
-        return protected_grouped_matmul(d, w, cfg=use_cfg)
+        if detected is not None:
+            raise NotImplementedError(
+                "protect_op: grouped_matmul does not support an external "
+                "`detected` gate (per-group gates would need a vector)")
+        return protected_grouped_matmul(d, w, cfg=use_cfg, mode=mode)
     raise ValueError(f"unknown op kind {op.kind!r}")
+
+
+def correct_op(op: OpSpec, inputs, entry: Optional[PlanEntry] = None,
+               cfg: Optional[ProtectConfig] = None, o=None, detected=None,
+               ) -> Tuple[jnp.ndarray, FaultReport]:
+    """The reusable correction entry point: run the full multischeme
+    ladder (all s1-s4/row-col/verify work) on one op, regardless of any
+    detect_only serving config. This is the second half of the deferred
+    workflow - `protect_op(..., mode="detect_only")` produced the carry,
+    and a driver (the model-level cond in models.cnn, or a serving loop)
+    invokes correct_op only when something flagged. `detected` gates the
+    in-graph ladder from the carried flag instead of re-deriving it."""
+    return protect_op(op, inputs, entry=entry, cfg=cfg, o=o, mode="correct",
+                      detected=detected)
 
 
 # --------------------------------------------------------------------------
 # the plan
 # --------------------------------------------------------------------------
 
-def _weight_leaf(params, name: str):
+def weight_leaf(params, name: str):
     """Resolve an entry name ('conv3', 'fc', 'block/ffn/gate') to its
-    weight leaf in a nested param dict."""
+    weight leaf in a nested param dict (shared by plan.validate and the
+    runtime.ft plan-trusted weight audit)."""
     node = params
     for part in name.split("/"):
         if not isinstance(node, dict) or part not in node:
@@ -251,7 +293,7 @@ class ProtectionPlan:
         problems = []
         for name, e in self.entries.items():
             try:
-                w = _weight_leaf(params, name)
+                w = weight_leaf(params, name)
             except KeyError:
                 problems.append(f"{name}: not found in params")
                 continue

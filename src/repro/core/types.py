@@ -49,6 +49,23 @@ class FaultReport(NamedTuple):
         )
 
 
+class DetectEvidence(NamedTuple):
+    """Compact CoC-D carry of one protected op in detect-only execution
+    (the deferred-correction mode): just the flag and the strength of the
+    evidence, so a whole model's worth of carries stays O(layers) scalars.
+
+    `score` is max |C - S| / tau over the compared invariants (>1 means a
+    mismatch, non-finite values score +inf) - enough for a driver to rank
+    which layer screamed loudest without re-deriving any checksums."""
+    flag: jnp.ndarray   # i32: 1 if CoC-D flagged the op
+    score: jnp.ndarray  # f32: max residue-to-threshold ratio
+
+    @staticmethod
+    def clean() -> "DetectEvidence":
+        return DetectEvidence(jnp.zeros((), jnp.int32),
+                              jnp.zeros((), jnp.float32))
+
+
 def scheme_histogram(corrected_by) -> dict:
     """Host-side histogram of a batched `corrected_by` field: scheme name ->
     count. The campaign engine and benchmarks aggregate per-trial
@@ -70,19 +87,29 @@ class ModelReport:
     The merged-scalar view (`detected` / `corrected_by` / `residual`)
     matches the old single-FaultReport contract, so call sites that only
     want the model-level verdict keep working unchanged.
+
+    `mode` records which correction regime produced the verdicts
+    ("per_layer": every op ran its own lax.cond ladder; "deferred": the
+    ops ran detect-only and ONE model-level cond reran the corrective
+    forward). In deferred mode the per-layer `detected` flags are the
+    detect-pass provenance - attribution survives even though correction
+    happened at model granularity. Static metadata: lives in the treedef.
     """
 
-    def __init__(self, by_layer: Optional[Mapping[str, FaultReport]] = None):
+    def __init__(self, by_layer: Optional[Mapping[str, FaultReport]] = None,
+                 mode: str = "per_layer"):
         self.by_layer: Dict[str, FaultReport] = dict(by_layer or {})
+        self.mode = mode
 
     # -- pytree protocol ---------------------------------------------------
     def tree_flatten(self):
         keys = tuple(self.by_layer)
-        return tuple(self.by_layer[k] for k in keys), keys
+        return tuple(self.by_layer[k] for k in keys), (keys, self.mode)
 
     @classmethod
-    def tree_unflatten(cls, keys, children):
-        return cls(dict(zip(keys, children)))
+    def tree_unflatten(cls, aux, children):
+        keys, mode = aux
+        return cls(dict(zip(keys, children)), mode=mode)
 
     # -- construction ------------------------------------------------------
     def add(self, name: str, rep: "FaultReport | ModelReport") -> "ModelReport":
@@ -94,14 +121,14 @@ class ModelReport:
                 out[f"{name}/{sub}"] = r
         else:
             out[name] = rep
-        return ModelReport(out)
+        return ModelReport(out, mode=self.mode)
 
     def merge(self, other: "ModelReport") -> "ModelReport":
         """Union of layers; shared names merge elementwise."""
         out = dict(self.by_layer)
         for name, r in other.by_layer.items():
             out[name] = FaultReport.merge(out[name], r) if name in out else r
-        return ModelReport(out)
+        return ModelReport(out, mode=self.mode)
 
     # -- views -------------------------------------------------------------
     def __getitem__(self, name: str) -> FaultReport:
@@ -152,7 +179,7 @@ class ModelReport:
                 for name, r in self.by_layer.items()}
 
     def __repr__(self) -> str:
-        return f"ModelReport({list(self.by_layer)})"
+        return f"ModelReport({list(self.by_layer)}, mode={self.mode!r})"
 
 
 def as_fault_report(rep) -> FaultReport:

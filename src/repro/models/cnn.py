@@ -15,9 +15,10 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import (DEFAULT_CONFIG, ModelReport, ProtectConfig,
-                        ProtectionPlan, build_plan, conv_entry, matmul_entry,
-                        protect_op)
+from repro.core import (DEFAULT_CONFIG, FaultReport, ModelReport,
+                        ProtectConfig, ProtectionPlan, build_plan, conv_entry,
+                        matmul_entry, protect_op)
+from repro.core.workflow import run_deferred
 
 F32 = jnp.float32
 
@@ -130,21 +131,20 @@ def _maxpool(x: jnp.ndarray, k: int) -> jnp.ndarray:
                                  (1, 1, k, k), (1, 1, k, k), "VALID")
 
 
-def forward_cnn(params: Dict, x: jnp.ndarray, cfg: CNNConfig,
-                policies: Optional[Sequence[ProtectConfig]] = None,
-                inject_layer: int = -1, inject_o=None, *,
-                plan: Optional[ProtectionPlan] = None,
-                ) -> Tuple[jnp.ndarray, ModelReport]:
-    """x: (N, C, H, W) -> (logits, per-layer ModelReport).
-
-    `plan` is the offline-compiled ProtectionPlan (build_plan): per-layer
-    policy + precomputed weight checksums, and protection of the final fc
-    GEMM. Without a plan, each conv re-derives its weight checksums per
-    call under `policies[i]` (legacy shim) or the all-default config.
-    inject_layer/inject_o: test hook - replaces layer i's conv output with
-    a corrupted tensor before protection (the paper's per-layer injection).
-    """
-    rep = ModelReport()
+def _forward_pass(params: Dict, x: jnp.ndarray, cfg: CNNConfig,
+                  policies: Optional[Sequence[ProtectConfig]],
+                  inject_layer: int, inject_o,
+                  plan: Optional[ProtectionPlan],
+                  mode: Optional[str],
+                  detected: Optional[Dict] = None,
+                  ) -> Tuple[jnp.ndarray, List[str], List]:
+    """The shared layer walk behind both correction regimes: returns
+    (logits, protected-layer names, per-layer carries) where the carries
+    are FaultReports (mode None/"correct") or DetectEvidence
+    ("detect_only"). `detected` maps layer names to carried CoC-D flags
+    (the deferred rerun trusts the detect pass instead of re-detecting)."""
+    names: List[str] = []
+    carries: List[Any] = []
     feats = []
     for i, spec in enumerate(cfg.convs):
         name = f"conv{i}"
@@ -156,8 +156,11 @@ def forward_cnn(params: Dict, x: jnp.ndarray, cfg: CNNConfig,
         o = inject_o if i == inject_layer else None
         y, r = protect_op(entry.op,
                           (x, params[name]["w"], params[name]["b"]),
-                          entry=entry, o=o)
-        rep = rep.add(name, r)
+                          entry=entry, o=o, mode=mode,
+                          detected=None if detected is None
+                          else detected[name])
+        names.append(name)
+        carries.append(r)
         if spec.residual_from >= 0:
             short = feats[spec.residual_from]
             if short.shape != y.shape:
@@ -178,10 +181,76 @@ def forward_cnn(params: Dict, x: jnp.ndarray, cfg: CNNConfig,
     if plan is not None and "fc" in plan:
         logits, r = protect_op(plan["fc"].op,
                                (x, params["fc"]["w"], params["fc"]["b"]),
-                               entry=plan["fc"])
-        rep = rep.add("fc", r)
+                               entry=plan["fc"], mode=mode,
+                               detected=None if detected is None
+                               else detected["fc"])
+        names.append("fc")
+        carries.append(r)
     else:
         logits = x @ params["fc"]["w"] + params["fc"]["b"]
+    return logits, names, carries
+
+
+def forward_cnn(params: Dict, x: jnp.ndarray, cfg: CNNConfig,
+                policies: Optional[Sequence[ProtectConfig]] = None,
+                inject_layer: int = -1, inject_o=None, *,
+                plan: Optional[ProtectionPlan] = None,
+                correction: str = "per_layer",
+                ) -> Tuple[jnp.ndarray, ModelReport]:
+    """x: (N, C, H, W) -> (logits, per-layer ModelReport).
+
+    `plan` is the offline-compiled ProtectionPlan (build_plan): per-layer
+    policy + precomputed weight checksums, and protection of the final fc
+    GEMM. Without a plan, each conv re-derives its weight checksums per
+    call under `policies[i]` (legacy shim) or the all-default config.
+    inject_layer/inject_o: test hook - replaces layer i's conv output with
+    a corrupted tensor before protection (the paper's per-layer injection).
+
+    `correction` picks the workflow granularity:
+    * "per_layer" (default) - every protected op carries its own in-graph
+      lax.cond correction ladder;
+    * "deferred" - the whole forward runs detect-only (one compact
+      DetectEvidence carry per layer), then ONE model-level lax.cond
+      reruns the protected forward with full correction only when any
+      layer flagged (the paper's fuse-then-defer multischeme discipline,
+      in-graph). Error-free, the model carries a single cond instead of
+      one per layer; verdict attribution is preserved via the detect-pass
+      flags, and corrected logits are bitwise-identical to the per-layer
+      path (the rerun is the per-layer computation).
+    """
+    if correction not in ("per_layer", "deferred"):
+        raise ValueError(f"forward_cnn: unknown correction mode "
+                         f"{correction!r} (have 'per_layer', 'deferred')")
+    if correction == "per_layer":
+        logits, names, reps = _forward_pass(params, x, cfg, policies,
+                                            inject_layer, inject_o, plan,
+                                            mode=None)
+        return logits, ModelReport(dict(zip(names, reps)))
+
+    # ---- deferred: detect-only forward + one model-level cond ------------
+    logits_d, names, evs = _forward_pass(params, x, cfg, policies,
+                                         inject_layer, inject_o, plan,
+                                         mode="detect_only")
+    if not names:
+        return logits_d, ModelReport({}, mode="deferred")
+    flags = jnp.stack([e.flag for e in evs])
+
+    def _corrective_forward():
+        # the rerun trusts the detect-pass flags (no re-detection: the
+        # ladder verifies against freshly derived checksums anyway)
+        carried = {name: evs[i].flag > 0 for i, name in enumerate(names)}
+        logits_c, _, reps = _forward_pass(params, x, cfg, policies,
+                                          inject_layer, inject_o, plan,
+                                          mode="correct", detected=carried)
+        by = jnp.stack([r.corrected_by for r in reps])
+        resid = jnp.stack([r.residual for r in reps])
+        return logits_c, by, resid
+
+    logits, by, resid = run_deferred(jnp.max(flags) > 0, logits_d,
+                                     _corrective_forward, len(names))
+    rep = ModelReport(
+        {name: FaultReport(flags[i], by[i], resid[i])
+         for i, name in enumerate(names)}, mode="deferred")
     return logits, rep
 
 

@@ -12,6 +12,12 @@ step granularity:
 - too many consecutive failures -> restore-from-checkpoint escalation
   (node-failure handling; the driver in launch/train.py wires this to the
   CheckpointManager).
+
+Serving (weight-stationary) deployments hand StepRunner a ProtectionPlan:
+the plan's *persisted* weight checksums are the trusted root for the
+at-rest audit - no sums are re-derived at startup (a startup derivation
+on already-corrupted weights would bless the corruption), and divergence
+escalates straight to checkpoint restore.
 """
 from __future__ import annotations
 
@@ -23,10 +29,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FaultReport
+from repro.core import FaultReport, weight_checksums_matmul, weight_leaf
+from repro.core import checksums as C
 
 log = logging.getLogger("repro.ft")
 F32 = jnp.float32
+
+
+class WeightDivergenceError(RuntimeError):
+    """At-rest weights diverged from the plan's persisted checksums and no
+    checkpoint restore path is available: serving on them would silently
+    violate every invariant the plan encodes, so refusing is the only
+    safe verdict."""
 
 
 @dataclasses.dataclass
@@ -62,17 +76,122 @@ def audit_weights(params, trusted: Dict[str, np.ndarray],
     return (len(bad) == 0), bad
 
 
+def audit_weights_against_plan(params, plan, rtol: float = 1e-5
+                               ) -> Tuple[bool, list]:
+    """Audit at-rest weights against a ProtectionPlan's *persisted*
+    checksums (the RowHammer-regime trusted root).
+
+    Unlike `weight_checksums` + `audit_weights`, nothing trusted is
+    derived from the live params - the plan file (written at deploy time
+    by build_plan/plan.save) is the root of trust, so corruption that
+    happened before the serving process even started is still caught.
+    Per entry the current weight's checksums are re-encoded and compared
+    against the plan's stored cw1/cw2 (full per-channel/per-chunk
+    resolution); entries without precomputed checksums fall back to the
+    w_sum/w_asum content fingerprint. rtol absorbs cross-backend
+    reduction-order noise only."""
+    bad = []
+    for name, e in plan.entries.items():
+        try:
+            w = weight_leaf(params, name)
+        except KeyError:
+            bad.append(f"{name}: missing from params")
+            continue
+        if e.w_shape is not None and tuple(w.shape) != tuple(e.w_shape):
+            bad.append(f"{name}: shape {tuple(w.shape)} vs plan "
+                       f"{tuple(e.w_shape)}")
+            continue
+        if e.wck is None:
+            if e.w_sum is None:
+                continue           # policy-only entry: nothing persisted
+            got = float(jnp.sum(w.astype(F32)))
+            tol = rtol * ((e.w_asum or abs(e.w_sum)) + 1.0)
+            if not np.isfinite(got) or abs(got - e.w_sum) > tol:
+                bad.append(f"{name}: weight-sum fingerprint diverged "
+                           f"({got:.6g} vs plan {e.w_sum:.6g})")
+            continue
+        if e.op.kind == "matmul":
+            fresh = weight_checksums_matmul(w, e.wck.col_chunk)
+            pairs = ((np.asarray(e.wck.cw1), np.asarray(fresh.cw1)),
+                     (np.asarray(e.wck.cw2), np.asarray(fresh.cw2)))
+        else:
+            cw1, cw2 = C.encode_w_conv(w, groups=e.op.groups)
+            pairs = ((np.asarray(e.wck[0]), np.asarray(cw1)),
+                     (np.asarray(e.wck[1]), np.asarray(cw2)))
+        for i, (want, got) in enumerate(pairs):
+            tol = rtol * (float(np.abs(want).max(initial=0.0)) + 1.0)
+            if (not np.all(np.isfinite(got))
+                    or float(np.abs(got - want).max(initial=0.0)) > tol):
+                bad.append(f"{name}: cw{i + 1} diverged from the plan's "
+                           "persisted checksums")
+                break
+    return (len(bad) == 0), bad
+
+
+def _default_params(state):
+    return state["params"] if isinstance(state, dict) and "params" in state \
+        else state
+
+
 class StepRunner:
-    """Runs a jitted step with verdict-driven retry/restore."""
+    """Runs a jitted step with verdict-driven retry/restore.
+
+    With a `plan`, the runner also polices the RowHammer regime: every
+    `policy.audit_weights_every` steps (including step 0 - corruption
+    that predates the process must not be blessed) the at-rest weights
+    are audited against the plan's persisted checksums, and divergence
+    escalates to checkpoint restore (`restore_fn`) - the paper's 'reload
+    weights from the CNN model'. No trusted sums are derived at startup;
+    the plan file is the root of trust."""
 
     def __init__(self, step_fn: Callable, policy: FTPolicy,
-                 restore_fn: Optional[Callable] = None):
+                 restore_fn: Optional[Callable] = None,
+                 plan=None, params_fn: Optional[Callable] = None):
         self.step_fn = step_fn
         self.policy = policy
         self.restore_fn = restore_fn
+        self.plan = plan
+        self.params_fn = params_fn or _default_params
         self.consecutive_failures = 0
+        self.step_count = 0
         self.stats = {"retries": 0, "restores": 0, "faults_detected": 0,
-                      "faults_corrected": 0}
+                      "faults_corrected": 0, "weight_audits": 0,
+                      "weight_restores": 0}
+
+    def audit(self, state) -> bool:
+        """One plan-trusted at-rest weight audit; True = weights match the
+        plan's persisted checksums (no plan = trivially clean)."""
+        if self.plan is None:
+            return True
+        self.stats["weight_audits"] += 1
+        ok, bad = audit_weights_against_plan(self.params_fn(state),
+                                             self.plan)
+        if not ok:
+            log.error("plan-trusted weight audit failed: %s", bad[:5])
+        return ok
+
+    def _audit_or_restore(self, state):
+        """Audit against the plan; on divergence restore from checkpoint
+        (or refuse to serve when there is nothing to restore from). The
+        restored state is re-audited: a checkpoint hit by the same
+        at-rest corruption (or taken from a different training point
+        than the plan encode) must not be served unverified."""
+        if self.audit(state):
+            return state
+        if self.restore_fn is None:
+            raise WeightDivergenceError(
+                "at-rest weights diverged from the ProtectionPlan's "
+                "persisted checksums and no restore_fn is configured")
+        log.error("weight/plan divergence - restoring from checkpoint")
+        self.stats["weight_restores"] += 1
+        state = self.restore_fn()
+        if not self.audit(state):
+            raise WeightDivergenceError(
+                "restored checkpoint still diverges from the "
+                "ProtectionPlan's persisted checksums - refusing to serve "
+                "(checkpoint corrupted, or plan built from different "
+                "weights)")
+        return state
 
     def _verdict(self, metrics) -> Tuple[bool, FaultReport]:
         rep: FaultReport = metrics["report"]
@@ -87,6 +206,10 @@ class StepRunner:
         return ok, rep
 
     def run(self, state, batch):
+        every = self.policy.audit_weights_every
+        if self.plan is not None and every and self.step_count % every == 0:
+            state = self._audit_or_restore(state)
+        self.step_count += 1
         for attempt in range(self.policy.max_step_retries + 1):
             new_state, metrics = self.step_fn(state, batch)
             ok, rep = self._verdict(metrics)

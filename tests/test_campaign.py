@@ -40,12 +40,18 @@ def test_registry_contents():
     with the control/negative arms marked undetectable."""
     names = set(inj.FAULT_MODELS)
     assert {"none", "burst_row", "burst_col", "burst", "single_flip",
-            "scattered", "subthreshold"} <= names
+            "scattered", "subthreshold", "weight_corrupt"} <= names
     assert not inj.FAULT_MODELS["none"].detectable
     assert not inj.FAULT_MODELS["subthreshold"].detectable
     for fault in ("burst_row", "burst_col", "burst", "single_flip",
                   "scattered"):
         assert inj.FAULT_MODELS[fault].detectable
+        assert inj.FAULT_MODELS[fault].target == "output"
+        assert inj.FAULT_MODELS[fault].correctable
+    # the stale-plan arm corrupts weights post-encode: detectable but not
+    # in-graph correctable (the fix is runtime.ft's weight reload)
+    wc = inj.FAULT_MODELS["weight_corrupt"]
+    assert wc.target == "weight" and wc.detectable and not wc.correctable
     # ids are dense and stable (the engine lax.switches over them)
     ids = sorted(fm.model_id for fm in inj.FAULT_MODELS.values())
     assert ids == list(range(len(ids)))
@@ -257,6 +263,38 @@ def test_campaign_per_model_detection(engine):
     assert single.corrected_by.get("coc", 0) > 0
 
 
+def test_campaign_weight_corrupt_detected_not_corrected(engine):
+    """The stale-plan/RowHammer arm: weights corrupted *after* the plan
+    encode must always be detected (output diverges from the plan's
+    checksums), while the output-side ladder by construction cannot
+    restore them - residuals surface so the driver reloads weights."""
+    cell = engine.run_cell("matmul", "full", "weight_corrupt", trials=128,
+                           seed=6)
+    assert cell.detection_rate == 1.0
+    assert cell.correction_rate == 0.0
+    assert cell.residual_rate == 1.0
+    conv = engine.run_cell("conv", "full", "weight_corrupt", trials=64,
+                           seed=7)
+    assert conv.detection_rate == 1.0
+    # and the gates accept the cell (detection-only contract)
+    assert campaign_check(
+        CampaignResult(cells=[cell, conv], meta={})) == []
+
+
+def test_campaign_deferred_scheme_matches_full(engine):
+    """The deferred per-op workflow (detect-only + ONE cond into
+    correct_op) must reproduce the 'full' scheme's verdicts, corrected-by
+    histogram and oracle scores arm for arm."""
+    for fault in ("burst", "single_flip", "none"):
+        cd = engine.run_cell("matmul", "deferred", fault, trials=128, seed=1)
+        cf = engine.run_cell("matmul", "full", fault, trials=128, seed=1)
+        assert cd.detection_rate == cf.detection_rate, fault
+        assert cd.correction_rate == cf.correction_rate, fault
+        assert cd.residual_rate == cf.residual_rate, fault
+        assert cd.corrected_by == cf.corrected_by, fault
+    assert cd.false_positive_rate == 0.0        # the control arm (none)
+
+
 # --------------------------------------------------------------------------
 # artifact schema + CLI gates
 # --------------------------------------------------------------------------
@@ -303,6 +341,21 @@ def test_check_gates():
                       residual_rate=0.2)]
     violations = campaign_check(CampaignResult(cells=bad, meta={}))
     assert len(violations) == 5   # det, fp, negative-control det, corr, resid
+
+
+def test_check_gates_weight_corrupt_detection_only():
+    """Non-correctable arms gate on detection alone: residual 1.0 is the
+    expected outcome (the ladder cannot fix weights), a missed detection
+    is still a failure."""
+    ok = [_fake_cell(fault="weight_corrupt", detection_rate=1.0,
+                     correction_rate=0.0, residual_rate=1.0,
+                     corrected_by={})]
+    assert campaign_check(CampaignResult(cells=ok, meta={})) == []
+    bad = [_fake_cell(fault="weight_corrupt", detection_rate=0.9,
+                      correction_rate=0.0, residual_rate=1.0,
+                      corrected_by={})]
+    violations = campaign_check(CampaignResult(cells=bad, meta={}))
+    assert len(violations) == 1 and "detection_rate" in violations[0]
 
 
 def test_cli_rejects_unknown_cells():

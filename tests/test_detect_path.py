@@ -22,8 +22,10 @@ import pytest
 
 import repro.core as core
 from repro.core import checksums as C
+from repro.core import injection as inj
 from repro.core import types as T
 from repro.core.protected import protected_conv, protected_matmul
+from repro.models import cnn
 
 F32 = jnp.float32
 
@@ -276,3 +278,163 @@ def test_kernel_interpret_auto_resolution():
     assert cfg.replace(kernel_interpret=True).resolve_interpret() is True
     auto = cfg.resolve_interpret()
     assert auto == (jax.default_backend() != "tpu")
+
+
+# --------------------------------------------------------------------------
+# the detect-only/correct_op split (the deferred-correction building blocks)
+# --------------------------------------------------------------------------
+
+def test_detect_only_mode_returns_evidence_carry():
+    """protect_op(mode="detect_only") returns the raw output plus a
+    compact DetectEvidence for every op kind; correct_op then runs the
+    full ladder on the flagged output."""
+    d, w, b = _conv_operands()
+    o_clean = C.conv2d(d, w)
+    o_clean = (o_clean.astype(F32) + b[None, :, None, None]).astype(F32)
+    op = core.OpSpec("conv")
+    out, ev = core.protect_op(op, (d, w, b), o=o_clean, mode="detect_only")
+    assert isinstance(ev, core.DetectEvidence)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(o_clean))
+    assert int(ev.flag) == 0 and float(ev.score) < 1.0
+
+    bad = o_clean.at[1, 2].add(1e4)
+    out, ev = core.protect_op(op, (d, w, b), o=bad, mode="detect_only")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(bad))
+    assert int(ev.flag) == 1 and float(ev.score) > 1.0
+
+    fixed, rep = core.correct_op(op, (d, w, b), o=bad, detected=ev.flag > 0)
+    assert int(rep.detected) == 1 and int(rep.residual) == 0
+    np.testing.assert_allclose(np.asarray(fixed), np.asarray(o_clean),
+                               atol=5e-2)
+
+    # matmul and grouped_matmul speak the same carry
+    dm, wm = _matmul_operands()
+    _, ev_m = core.protect_op(core.OpSpec("matmul"), (dm, wm),
+                              mode="detect_only")
+    assert isinstance(ev_m, core.DetectEvidence) and int(ev_m.flag) == 0
+    dg = jnp.stack([dm[:4], dm[4:8]])
+    wg = jnp.stack([wm, wm])
+    _, ev_g = core.protect_op(core.OpSpec("grouped_matmul"), (dg, wg),
+                              mode="detect_only")
+    assert isinstance(ev_g, core.DetectEvidence) and int(ev_g.flag) == 0
+
+
+def test_detect_only_mode_traces_no_correction_machinery():
+    """mode='detect_only' must not even trace the ladder: no cond, no
+    c1-c4 checksum convs anywhere in the program."""
+    d, w, b = _conv_operands()
+    jaxpr = jax.make_jaxpr(
+        lambda d, w, b: core.protect_op(core.OpSpec("conv"), (d, w, b),
+                                        mode="detect_only")[0])(d, w, b)
+
+    def all_eqns(jx):
+        out = list(jx.eqns)
+        for eqn in jx.eqns:
+            for v in eqn.params.values():
+                for sub in jax.tree_util.tree_leaves(
+                        v, is_leaf=lambda x: isinstance(
+                            x, (jax.core.Jaxpr, jax.core.ClosedJaxpr))):
+                    if isinstance(sub, jax.core.ClosedJaxpr):
+                        out += all_eqns(sub.jaxpr)
+                    elif isinstance(sub, jax.core.Jaxpr):
+                        out += all_eqns(sub)
+        return out
+
+    eqns = all_eqns(jaxpr.jaxpr)
+    assert not any(e.primitive.name == "cond" for e in eqns)
+    convs = [e for e in eqns if e.primitive.name == "conv_general_dilated"]
+    assert len(convs) == 2    # the op + ONE fused checksum conv, nothing else
+
+
+# --------------------------------------------------------------------------
+# deferred model-level correction (forward_cnn(..., correction="deferred"))
+# --------------------------------------------------------------------------
+
+SCALE_CNN, IMG_CNN = 0.12, 48
+
+
+@pytest.fixture(scope="module")
+def cnn_model():
+    cfg = cnn.alexnet(SCALE_CNN)
+    cfg = cfg.__class__(**{**cfg.__dict__, "img": IMG_CNN})
+    params = cnn.init_cnn(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, IMG_CNN, IMG_CNN))
+    plan = core.build_plan(params, cfg, batch=2)
+    return cfg, params, x, plan
+
+
+def test_deferred_exactly_one_model_cond(cnn_model):
+    """The deferred forward carries exactly ONE correction cond for the
+    whole model (the per-layer path pays one per protected op) - the
+    error-free-overhead contract of the deferred mode."""
+    cfg, params, x, plan = cnn_model
+    jaxpr = jax.make_jaxpr(
+        lambda p, x: cnn.forward_cnn(p, x, cfg, plan=plan,
+                                     correction="deferred")[0])(params, x)
+    conds = [e for e in jaxpr.jaxpr.eqns if e.primitive.name == "cond"]
+    assert len(conds) == 1, [str(e.primitive) for e in jaxpr.jaxpr.eqns]
+    jaxpr_pl = jax.make_jaxpr(
+        lambda p, x: cnn.forward_cnn(p, x, cfg, plan=plan)[0])(params, x)
+    conds_pl = [e for e in jaxpr_pl.jaxpr.eqns if e.primitive.name == "cond"]
+    assert len(conds_pl) == len(plan)       # one per conv + the fc GEMM
+
+
+def test_deferred_clean_parity_bitwise(cnn_model):
+    cfg, params, x, plan = cnn_model
+    l_pl, r_pl = cnn.forward_cnn(params, x, cfg, plan=plan)
+    l_df, r_df = jax.jit(
+        lambda p, x: cnn.forward_cnn(p, x, cfg, plan=plan,
+                                     correction="deferred"))(params, x)
+    np.testing.assert_array_equal(np.asarray(l_pl), np.asarray(l_df))
+    assert r_df.mode == "deferred" and r_pl.mode == "per_layer"
+    assert set(r_df.by_layer) == set(r_pl.by_layer)
+    assert int(r_df.detected) == 0 and int(r_df.residual) == 0
+
+
+@pytest.mark.parametrize("fault", ["burst_row", "burst_col", "single_flip",
+                                   "scattered"])
+def test_deferred_injection_parity(cnn_model, fault):
+    """Under the campaign's fault models the deferred path must reproduce
+    the per-layer path's verdicts exactly, layer by layer, and its logits
+    to correction precision.
+
+    The corrective rerun IS the per-layer computation, but it compiles
+    inside the single model-level cond branch while the per-layer ladder
+    compiles in its own per-op branch: XLA fuses the identical correction
+    arithmetic differently across the two contexts, so corrected values
+    agree to fp32 reassociation noise (~1e-5 rel), not bit for bit - the
+    bitwise contract holds on the error-free path, where no cond branch
+    executes (test_deferred_clean_parity_bitwise and the campaign's
+    control arm)."""
+    cfg, params, x, plan = cnn_model
+    layer = 2
+    _, o_clean = cnn.conv_output_at(params, x, cfg, layer)
+    model = inj.FAULT_MODELS[fault]
+    n, m = o_clean.shape[0], o_clean.shape[1]
+    spec = model.plan(jax.random.PRNGKey(layer + 31), n, m,
+                      o_clean.shape[2] * o_clean.shape[3], 64)
+    o_bad = inj.inject(o_clean, spec, model)
+    l_pl, r_pl = cnn.forward_cnn(params, x, cfg, plan=plan,
+                                 inject_layer=layer, inject_o=o_bad)
+    l_df, r_df = cnn.forward_cnn(params, x, cfg, plan=plan,
+                                 inject_layer=layer, inject_o=o_bad,
+                                 correction="deferred")
+    scale = float(np.max(np.abs(np.asarray(l_pl)))) + 1.0
+    np.testing.assert_allclose(np.asarray(l_pl), np.asarray(l_df),
+                               atol=1e-4 * scale)
+    assert int(r_df.by_layer[f"conv{layer}"].detected) == 1
+    for name in r_pl.by_layer:
+        a, b = r_pl.by_layer[name], r_df.by_layer[name]
+        assert int(a.detected) == int(b.detected), name
+        assert int(a.corrected_by) == int(b.corrected_by), name
+        assert int(a.residual) == int(b.residual), name
+
+
+def test_deferred_rejects_unknown_mode(cnn_model):
+    cfg, params, x, plan = cnn_model
+    with pytest.raises(ValueError, match="correction mode"):
+        cnn.forward_cnn(params, x, cfg, plan=plan, correction="bogus")
+    with pytest.raises(ValueError, match="protect_op mode"):
+        core.protect_op(core.OpSpec("matmul"),
+                        (jnp.zeros((4, 4)), jnp.zeros((4, 4))),
+                        mode="bogus")

@@ -1,5 +1,7 @@
 """End-to-end training behaviour: loss decreases, backward protection,
-checkpoint restart determinism, FT runner retry logic."""
+checkpoint restart determinism, FT runner retry logic, and the
+plan-trusted serving audit (plan file = root of trust for at-rest
+weights)."""
 import os
 
 import jax
@@ -8,12 +10,15 @@ import numpy as np
 import pytest
 
 import repro.configs as C
+import repro.core as core
 from repro.checkpoint import CheckpointManager
 from repro.data import DataConfig, host_batch
 from repro.launch.steps import (cross_entropy, init_train_state,
                                 make_train_step)
+from repro.models import cnn
 from repro.optim import OptConfig
-from repro.runtime.ft import FTPolicy, StepRunner
+from repro.runtime.ft import (FTPolicy, StepRunner, WeightDivergenceError,
+                              audit_weights_against_plan)
 
 
 def _tiny_cfg():
@@ -114,6 +119,94 @@ def test_step_runner_retries_on_residual():
     assert calls["n"] == 2
     assert runner.stats["retries"] == 1
     assert runner.stats["faults_detected"] == 1
+
+
+def _cnn_plan(tmp_path):
+    """A tiny CNN + its saved/loaded ProtectionPlan (the serving root of
+    trust: checksums come from the plan *file*, not the live params)."""
+    cfg = cnn.alexnet(0.12)
+    cfg = cfg.__class__(**{**cfg.__dict__, "img": 32})
+    params = cnn.init_cnn(jax.random.PRNGKey(0), cfg)
+    plan = core.build_plan(params, cfg, batch=2)
+    plan.save(str(tmp_path / "plan.json"))
+    return params, core.ProtectionPlan.load(str(tmp_path / "plan.json"))
+
+
+def _flip_weight(params, name, idx, delta=0.5):
+    out = dict(params)
+    out[name] = dict(out[name])
+    out[name]["w"] = out[name]["w"].at[idx].add(delta)
+    return out
+
+
+def test_audit_weights_against_plan(tmp_path):
+    params, plan = _cnn_plan(tmp_path)
+    ok, bad = audit_weights_against_plan(params, plan)
+    assert ok and bad == []
+    # a single post-encode element flip in a conv is caught via the
+    # persisted per-channel checksums
+    ok, bad = audit_weights_against_plan(
+        _flip_weight(params, "conv1", (0, 0, 0, 0)), plan)
+    assert not ok and any("conv1" in b for b in bad)
+    # ... and in the fc GEMM via the persisted chunked checksums
+    ok, bad = audit_weights_against_plan(
+        _flip_weight(params, "fc", (3, 3)), plan)
+    assert not ok and any("fc" in b for b in bad)
+    # a missing layer is divergence, not silence
+    ok, bad = audit_weights_against_plan(
+        {k: v for k, v in params.items() if k != "conv0"}, plan)
+    assert not ok and any("conv0" in b for b in bad)
+
+
+def test_step_runner_plan_audit_restores_pre_start_corruption(tmp_path):
+    """The acceptance scenario: weights corrupted AFTER the plan encode
+    but BEFORE the serving process starts. A startup re-derivation of
+    trusted sums would bless the corruption; the plan-trusted audit
+    catches it on step 0 and escalates to checkpoint restore."""
+    params, plan = _cnn_plan(tmp_path)
+    corrupted = _flip_weight(params, "conv1", (0, 0, 0, 0))
+    seen = []
+
+    def step_fn(state, batch):
+        seen.append(float(jnp.sum(state["params"]["conv1"]["w"])))
+        return state, {"loss": jnp.float32(1.0),
+                       "report": core.FaultReport.clean()}
+
+    runner = StepRunner(step_fn, FTPolicy(audit_weights_every=1),
+                        restore_fn=lambda: {"params": params}, plan=plan)
+    state, _ = runner.run({"params": corrupted}, {})
+    # two audits on step 0: the failing one plus the post-restore
+    # re-audit (a corrupted checkpoint must not be served unverified)
+    assert runner.stats["weight_audits"] == 2
+    assert runner.stats["weight_restores"] == 1
+    # the step ran on the RESTORED weights, not the corrupted ones
+    assert seen == [float(jnp.sum(params["conv1"]["w"]))]
+    # clean state passes the next audit without restoring again
+    runner.run(state, {})
+    assert runner.stats["weight_audits"] == 3
+    assert runner.stats["weight_restores"] == 1
+
+
+def test_step_runner_refuses_still_diverged_restore(tmp_path):
+    """A restore that does not resolve the divergence (checkpoint hit by
+    the same at-rest corruption) is refused, not served."""
+    params, plan = _cnn_plan(tmp_path)
+    corrupted = _flip_weight(params, "conv1", (0, 0, 0, 0))
+    runner = StepRunner(lambda s, b: (s, {}),
+                        FTPolicy(audit_weights_every=1),
+                        restore_fn=lambda: {"params": corrupted}, plan=plan)
+    with pytest.raises(WeightDivergenceError, match="restored checkpoint"):
+        runner.run({"params": corrupted}, {})
+    assert runner.stats["weight_restores"] == 1
+
+
+def test_step_runner_plan_audit_refuses_without_restore(tmp_path):
+    params, plan = _cnn_plan(tmp_path)
+    corrupted = _flip_weight(params, "fc", (0, 0))
+    runner = StepRunner(lambda s, b: (s, {}),
+                        FTPolicy(audit_weights_every=1), plan=plan)
+    with pytest.raises(WeightDivergenceError):
+        runner.run({"params": corrupted}, {})
 
 
 def test_async_checkpoint_and_gc(tmp_path):
