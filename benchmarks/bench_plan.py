@@ -30,11 +30,12 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import ProtectionPlan, build_plan, matmul_entry, protect_op
+from repro.core import (ProtectedModel, ProtectionPlan, build_plan,
+                        matmul_entry, protect_op)
 from repro.models import cnn
 from .common import row
 
-SCHEMA = "repro.bench_plan/v3"
+SCHEMA = "repro.bench_plan/v4"
 SCALE = 0.12
 IMG = 64
 BATCH = 8
@@ -234,6 +235,50 @@ def _trajectory_cell():
     }
 
 
+def _transformer_cell():
+    """The unified-API cell: a scanned transformer forward under an
+    offline plan, measured with the same rotated-trio methodology and
+    deferred gate as the CNN rows. The model is the reduced smollm config
+    (2x16 tokens): small enough for CI, and its lax.scan stage means the
+    deferred saving here is the scan-carried cond structure, not N
+    per-layer conds - the cell exists to keep the transformer path's
+    error-free overhead on the same trajectory tracking as the CNNs."""
+    import repro.configs as C
+    from repro.models import transformer as M
+    cfg = C.reduced(C.get("smollm-360m"))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size, jnp.int32)
+    plan = build_plan(params, cfg, batch=2)
+    pm = ProtectedModel(M.train_apply(cfg), plan)
+    off = cfg.replace(abft=False)
+    f_plain = jax.jit(lambda p, t: M.forward_train(p, t, off)[0])
+    # logits flow through every protected op's cond (per-layer) / the one
+    # model-level cond (deferred), so detection cannot be DCE'd out of
+    # the timed [0][0] slice
+    f_perlayer = jax.jit(lambda p, t: pm(p, t)[0][0])
+    f_deferred = jax.jit(
+        lambda p, t: pm(p, t, correction="deferred")[0][0])
+    t_plain, t_pl, t_df = _interleaved(
+        f_plain, f_perlayer, f_deferred, args=(params, tokens),
+        rounds=60, iters=2)
+    return {
+        "op": f"{cfg.name} reduced train-fwd batch=2 seq=16 (scan stages)",
+        "plain_us": t_plain * 1e6,
+        "reused_us": t_pl * 1e6,
+        # alias of reused_us, NOT an independent trio like the CNN rows:
+        # this cell runs one rotated trio, so the deferred gate's
+        # per-layer reference and the tracked overhead number are the
+        # same measurement (don't read a 0% spread into the two columns)
+        "per_layer_in_deferred_trio_us": t_pl * 1e6,
+        "deferred_us": t_df * 1e6,
+        "overhead_reused_pct": (t_pl - t_plain) / t_plain * 100,
+        "overhead_deferred_pct": (t_df - t_plain) / t_plain * 100,
+        "deferred_lt_per_layer": bool(t_df < t_pl),
+        "deferred_gate_pass": bool(t_df <= DEFERRED_SLACK * t_pl),
+    }
+
+
 def _regression(results: dict, baseline_path: str | None,
                 trajectory: dict | None = None) -> dict:
     """Compare each cell's overhead_reused_pct (per model + the
@@ -348,6 +393,15 @@ def run(models=MODELS, out_path: str | None = None):
     trajectory = _trajectory_cell()
     rows.append(row("plan/trajectory_large", trajectory["reused_us"],
                     f"plain_us={trajectory['plain_us']:.0f}"))
+
+    # the unified-API transformer cell rides the same deferred gate and
+    # baseline regression as the CNN rows (ProtectedModel is one surface)
+    transformer = _transformer_cell()
+    results["transformer"] = transformer
+    rows.append(row(
+        "plan/transformer", transformer["reused_us"],
+        f"plain_us={transformer['plain_us']:.0f};"
+        f"deferred_us={transformer['deferred_us']:.0f}"))
 
     regression = _regression(results, baseline_path, trajectory=trajectory)
     # the deferred-correction gate: per model, deferred error-free

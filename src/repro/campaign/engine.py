@@ -27,7 +27,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import injection as inj
-from repro.core import conv_entry, correct_op, matmul_entry, protect_op
+from repro.core import (ProtectionPlan, conv_entry, correct_op, matmul_entry,
+                        path_scope, plan_scope, protect_op, protect_site,
+                        resolve_entry)
 from repro.core import types as T
 from repro.kernels import ref
 
@@ -89,7 +91,26 @@ class ConvCase:
         return self.n, self.m, self.e * self.e
 
 
-LAYER_CASES = {"matmul": MatmulCase(), "conv": ConvCase()}
+@dataclasses.dataclass(frozen=True)
+class TransformerGemmCase:
+    """A transformer-block GEMM (d_model -> d_ff shape) protected through
+    the ambient plan-context path (plan_scope + by-path entry resolution,
+    the route every ProtectedModel layer takes) instead of an explicit
+    entry argument - so the campaign's statistical detection/correction
+    gates cover the unified resolution code, not just protect_op."""
+    n: int = 48     # tokens (B*S of a decode-ish microbatch)
+    k: int = 64     # d_model
+    m: int = 96     # d_ff
+
+    kind = "transformer_gemm"
+
+    @property
+    def block_shape(self) -> Tuple[int, int, int]:
+        return self.n, self.m, 1
+
+
+LAYER_CASES = {"matmul": MatmulCase(), "conv": ConvCase(),
+               "transformer_gemm": TransformerGemmCase()}
 
 # Differential-oracle tolerance: corrected output must match the reference
 # to within TOL_REL * (max|O_ref| + 1) - the same envelope the scheme tests
@@ -198,6 +219,41 @@ def _matmul_trial(case: MatmulCase, cfg: T.ProtectConfig, max_elems: int,
     return trial
 
 
+def _transformer_gemm_trial(case: TransformerGemmCase, cfg: T.ProtectConfig,
+                            max_elems: int, models: List[inj.FaultModel],
+                            deferred: bool = False):
+    """Like _matmul_trial, but the entry reaches the op the way a
+    ProtectedModel layer gets it: a per-trial one-entry ProtectionPlan
+    entered via plan_scope, the call site resolving "blk/ffn/gate" from
+    nested path scopes."""
+    inject_o = _switch_inject(models, case.block_shape, max_elems)
+    inject_w = _switch_inject(models, (case.k, case.m, 1), max_elems,
+                              target="weight")
+
+    def trial(key, model_id):
+        kd, kw, kf = jax.random.split(key, 3)
+        d = jax.random.normal(kd, (case.n, case.k), F32)
+        w = jax.random.normal(kw, (case.k, case.m), F32)
+        o_ref, _ = ref.abft_matmul_ref(d, w, bm=case.n, bn=case.m)
+        plan = ProtectionPlan(entries={
+            "blk/ffn/gate": matmul_entry("blk/ffn/gate", w, cfg)})
+        w_run = inject_w(kf, model_id, w)
+        o_run, _ = ref.abft_matmul_ref(d, w_run, bm=case.n, bn=case.m)
+        o_bad = inject_o(kf, model_id, o_run)
+        with plan_scope(plan), path_scope("blk", "ffn"):
+            entry = resolve_entry("gate")
+            if entry is None:   # would silently run unprotected
+                raise RuntimeError("ambient plan resolution failed")
+            if deferred:
+                out, rep = _deferred_protect(entry, d, w_run, o_bad)
+            else:
+                out, rep = protect_site("gate", (d, w_run), entry=entry,
+                                        o=o_bad)
+        return _score(out, rep, o_ref)
+
+    return trial
+
+
 def _conv_trial(case: ConvCase, cfg: T.ProtectConfig, max_elems: int,
                 models: List[inj.FaultModel], deferred: bool = False):
     inject_o = _switch_inject(models, case.block_shape, max_elems)
@@ -239,7 +295,8 @@ class CampaignEngine:
         if cache_key not in self._runners:
             case = self.cases[layer]
             cfg = SCHEME_CONFIGS[scheme]
-            build = _matmul_trial if case.kind == "matmul" else _conv_trial
+            build = {"matmul": _matmul_trial, "conv": _conv_trial,
+                     "transformer_gemm": _transformer_gemm_trial}[case.kind]
             trial = build(case, cfg, self.max_elems, self._models,
                           deferred=scheme == "deferred")
             self._runners[cache_key] = jax.jit(

@@ -8,13 +8,19 @@ from .protected import (WeightChecksums, abft_matmul_vjp, pick_chunk,
                         weight_checksums_matmul)
 from .injection import (CONTROL_MODEL, FAULT_MODELS, FaultModel, FaultSpec,
                         fault_model_names, register_fault_model)
-from .plan import (OpSpec, PlanEntry, PlanStaleError, ProtectionPlan,
-                   build_plan, conv_entry, correct_op, grouped_matmul_entry,
-                   matmul_entry, protect_op, weight_leaf)
+from .plan import (OpSite, OpSpec, PlanEntry, PlanStaleError, ProtectionPlan,
+                   ProtectionSpec, apply_w_view, build_plan,
+                   calibrate_tau_factor, conv_entry, correct_op,
+                   current_path, entry_overrides, grouped_matmul_entry,
+                   matmul_entry, ambient_mode, path_scope, plan_scope,
+                   protect_op, protect_site, protection_spec, resolve_entry,
+                   stacked_weight_checksums_matmul, weight_leaf)
 from .types import (CHECKSUM_REFRESH, CLC, COC, DEFAULT_CONFIG, FC, NONE, RC,
                     RECOMPUTE, SCHEME_NAMES, DetectEvidence, FaultReport,
                     ModelReport, ProtectConfig, as_fault_report,
-                    default_kernel_interpret, scheme_histogram)
+                    clean_report, default_kernel_interpret, merge_verdicts,
+                    scheme_histogram)
+from .workflow import ProtectedModel
 
 __all__ = [
     "checksums", "injection", "plan", "policy", "schemes", "thresholds",
@@ -23,11 +29,15 @@ __all__ = [
     "protected_matmul", "weight_checksums_matmul",
     "CONTROL_MODEL", "FAULT_MODELS", "FaultModel", "FaultSpec",
     "fault_model_names", "register_fault_model",
-    "OpSpec", "PlanEntry", "PlanStaleError", "ProtectionPlan", "build_plan",
-    "conv_entry", "correct_op", "grouped_matmul_entry", "matmul_entry",
-    "protect_op", "weight_leaf",
+    "OpSite", "OpSpec", "PlanEntry", "PlanStaleError", "ProtectionPlan",
+    "ProtectionSpec", "apply_w_view", "build_plan", "calibrate_tau_factor",
+    "conv_entry", "correct_op", "current_path", "entry_overrides",
+    "grouped_matmul_entry", "matmul_entry", "ambient_mode", "path_scope",
+    "plan_scope", "protect_op", "protect_site", "protection_spec",
+    "resolve_entry", "stacked_weight_checksums_matmul", "weight_leaf",
     "CHECKSUM_REFRESH", "CLC", "COC", "DEFAULT_CONFIG", "FC", "NONE", "RC",
     "RECOMPUTE", "SCHEME_NAMES", "DetectEvidence", "FaultReport",
-    "ModelReport", "ProtectConfig", "as_fault_report",
-    "default_kernel_interpret", "scheme_histogram",
+    "ModelReport", "ProtectConfig", "as_fault_report", "clean_report",
+    "default_kernel_interpret", "merge_verdicts", "scheme_histogram",
+    "ProtectedModel",
 ]

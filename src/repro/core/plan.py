@@ -27,17 +27,20 @@ overhead accounting assumes.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
-from typing import Any, Dict, Optional, Tuple
+import logging
+from typing import Any, Dict, Iterator, List, Mapping, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import checksums as C
 from .policy import (CostModel, OpShape, decide_rc_clc,
                      profile_conv_detect_kernel, profile_matmul_kernel)
-from .protected import (WeightChecksums, protect_matmul_output,
+from .protected import (WeightChecksums, pick_chunk, protect_matmul_output,
                         protected_conv, protected_grouped_matmul,
                         protected_matmul, weight_checksums_matmul)
 from .types import (DEFAULT_CONFIG, DetectEvidence, FaultReport,
@@ -73,6 +76,27 @@ class OpSpec:
         return [(self.pad, self.pad)] * 2
 
 
+# Named weight views: how a plan entry's GEMM weight is derived from the
+# param-tree leaf it is keyed under. The only non-identity view today is
+# the tied-embeddings LM head, whose (d, nc*V) weight is the transposed
+# flattened embedding table - the view lets build_plan precompute head
+# checksums offline and lets the at-rest audit re-derive them from the
+# table leaf without a second copy of the weights in the plan.
+W_VIEWS = {
+    "tied_head": lambda w: w.reshape(-1, w.shape[-1]).T,
+}
+
+
+def apply_w_view(w, view: Optional[str]):
+    """Resolve a param leaf to the GEMM weight an entry was encoded from."""
+    if view is None:
+        return w
+    if view not in W_VIEWS:
+        raise ValueError(f"unknown weight view {view!r} "
+                         f"(have {sorted(W_VIEWS)})")
+    return W_VIEWS[view](w)
+
+
 @dataclasses.dataclass
 class PlanEntry:
     """One op's offline decisions: policy config + precomputed weight
@@ -90,14 +114,27 @@ class PlanEntry:
     # without params.
     w_sum: Optional[float] = None
     w_asum: Optional[float] = None
+    # Number of leading STACK axes on the recorded weight (1 for the
+    # scanned transformer stages, whose params carry a leading repeats
+    # axis; the op inside the scan sees one slice). Checksums of stacked
+    # entries are encoded per slice with a matching leading axis.
+    stack: int = 0
+    # Named derivation of the GEMM weight from the param leaf (W_VIEWS).
+    w_view: Optional[str] = None
 
     def check_weight(self, w) -> None:
-        """Trace-time staleness check against the weight actually used."""
-        if self.w_shape is not None and tuple(w.shape) != tuple(self.w_shape):
-            raise PlanStaleError(
-                f"plan entry {self.name!r} was built for weight shape "
-                f"{tuple(self.w_shape)} but got {tuple(w.shape)}; rebuild "
-                "the plan with build_plan()")
+        """Trace-time staleness check against the weight actually used.
+        Stacked entries accept either the full stacked weight or one
+        per-repeat slice (what the op inside a lax.scan body sees)."""
+        if self.w_shape is not None:
+            want = tuple(self.w_shape)
+            ok = (tuple(w.shape) == want
+                  or (self.stack and tuple(w.shape) == want[self.stack:]))
+            if not ok:
+                raise PlanStaleError(
+                    f"plan entry {self.name!r} was built for weight shape "
+                    f"{want} but got {tuple(w.shape)}; rebuild "
+                    "the plan with build_plan()")
         if self.w_dtype is not None and str(w.dtype) != self.w_dtype:
             raise PlanStaleError(
                 f"plan entry {self.name!r} was built for dtype "
@@ -233,6 +270,162 @@ def correct_op(op: OpSpec, inputs, entry: Optional[PlanEntry] = None,
 
 
 # --------------------------------------------------------------------------
+# the ambient plan context (how layers resolve their PlanEntry by path)
+# --------------------------------------------------------------------------
+#
+# A ProtectedModel run executes the model's apply_fn under a plan scope:
+# every GEMM call site names itself ("wq", "gate", ...) inside nested path
+# scopes ("stages/b0_attn_full/attn"), and protect_site joins the two to
+# resolve the offline PlanEntry - the same param-tree path build_plan keyed
+# it under. The context also carries the execution mode of the deferred
+# workflow (detect_only / correct) and, in the corrective rerun, the
+# carried per-path CoC-D flags, so layers never thread a ProtectConfig or
+# a mode argument through the model family again.
+#
+# The context is trace-time state (like jax config flags): scopes are
+# entered inside the traced function, so a jitted forward captures one
+# consistent context per trace.
+
+@dataclasses.dataclass
+class _PlanContext:
+    plan: Optional["ProtectionPlan"]
+    mode: Optional[str] = None                     # PROTECT_MODES
+    detected: Optional[Mapping[str, Any]] = None   # path -> carried flag
+    prefix: Tuple[str, ...] = ()
+    overrides: Dict[str, PlanEntry] = dataclasses.field(default_factory=dict)
+
+
+_CTX: List[_PlanContext] = []
+
+
+def _current() -> Optional[_PlanContext]:
+    return _CTX[-1] if _CTX else None
+
+
+@contextlib.contextmanager
+def plan_scope(plan: Optional["ProtectionPlan"] = None, *,
+               mode: Optional[str] = None,
+               detected: Optional[Mapping[str, Any]] = None
+               ) -> Iterator[_PlanContext]:
+    """Enter a fresh ambient protection context (path prefix resets to the
+    param-tree root). `mode`/`detected` as in protect_op."""
+    if mode not in PROTECT_MODES:
+        raise ValueError(f"unknown plan_scope mode {mode!r} "
+                         f"(have {PROTECT_MODES})")
+    ctx = _PlanContext(plan=plan, mode=mode, detected=detected)
+    _CTX.append(ctx)
+    try:
+        yield ctx
+    finally:
+        _CTX.pop()
+
+
+@contextlib.contextmanager
+def path_scope(*segments: str) -> Iterator[None]:
+    """Append param-tree path segments to the ambient prefix (no-op when
+    no plan scope is active, so layers can always declare their paths)."""
+    ctx = _current()
+    if ctx is None:
+        yield
+        return
+    saved = ctx.prefix
+    ctx.prefix = saved + tuple(segments)
+    try:
+        yield
+    finally:
+        ctx.prefix = saved
+
+
+@contextlib.contextmanager
+def entry_overrides(mapping: Dict[str, PlanEntry]) -> Iterator[None]:
+    """Temporarily override resolved entries by absolute path - the
+    lax.scan body uses this to swap a stacked entry for its per-repeat
+    slice (checksums threaded through the scan's xs)."""
+    ctx = _current()
+    if ctx is None:
+        yield
+        return
+    saved = dict(ctx.overrides)
+    ctx.overrides.update(mapping)
+    try:
+        yield
+    finally:
+        ctx.overrides = saved
+
+
+def current_path(name: str = "") -> str:
+    ctx = _current()
+    parts = (ctx.prefix if ctx is not None else ()) + ((name,) if name else ())
+    return "/".join(parts)
+
+
+def ambient_mode() -> Optional[str]:
+    ctx = _current()
+    return ctx.mode if ctx is not None else None
+
+
+def ambient_plan() -> Optional["ProtectionPlan"]:
+    ctx = _current()
+    return ctx.plan if ctx is not None else None
+
+
+def resolve_entry(name: str) -> Optional[PlanEntry]:
+    """PlanEntry for `name` under the ambient path prefix (None when no
+    scope/plan is active or the plan has no entry at that path)."""
+    ctx = _current()
+    if ctx is None:
+        return None
+    path = current_path(name)
+    if path in ctx.overrides:
+        return ctx.overrides[path]
+    if ctx.plan is None:
+        return None
+    return ctx.plan.get(path)
+
+
+def _carried_flag(path: str):
+    ctx = _current()
+    if ctx is None or ctx.detected is None:
+        return None
+    return ctx.detected.get(path)
+
+
+def protect_site(name: str, inputs, *, entry: Optional[PlanEntry] = None,
+                 cfg: Optional[ProtectConfig] = None, o=None,
+                 op: Optional[OpSpec] = None):
+    """The uniform protected call site: protect_op with the ambient
+    context's entry resolution, execution mode, and carried detect flags.
+
+    `entry` (explicit) beats ambient resolution. When an entry applies,
+    its offline cfg rules; `cfg` is ONLY the fallback for sites without
+    an entry - and `cfg=None` there means unprotected (a planned-path
+    site the plan chose not to cover must not silently pick up the
+    default full config). `op` defaults to the entry's OpSpec, else a
+    plain matmul. In the deferred corrective rerun, sites whose exact
+    path carries a detect-pass flag trust it (the ladder skips
+    re-detection); sites inside a scan (whose evidence merged into the
+    stage carry) re-derive their own flag.
+    """
+    if entry is None:
+        entry = resolve_entry(name)
+    if entry is not None:
+        use_cfg = None                     # entry.cfg rules
+    else:
+        use_cfg = cfg if cfg is not None \
+            else DEFAULT_CONFIG.replace(enabled=False)
+    mode = ambient_mode()
+    detected = _carried_flag(current_path(name)) if mode == "correct" \
+        else None
+    if op is None:
+        op = entry.op if entry is not None else OpSpec("matmul")
+    if op.kind == "grouped_matmul":
+        # per-group gates would need a vector; grouped sites re-detect
+        detected = None
+    return protect_op(op, inputs, entry=entry, cfg=use_cfg, o=o, mode=mode,
+                      detected=detected)
+
+
+# --------------------------------------------------------------------------
 # the plan
 # --------------------------------------------------------------------------
 
@@ -293,7 +486,7 @@ class ProtectionPlan:
         problems = []
         for name, e in self.entries.items():
             try:
-                w = weight_leaf(params, name)
+                w = apply_w_view(weight_leaf(params, name), e.w_view)
             except KeyError:
                 problems.append(f"{name}: not found in params")
                 continue
@@ -342,7 +535,8 @@ class ProtectionPlan:
                    "cfg": dataclasses.asdict(e.cfg),
                    "w_shape": list(e.w_shape) if e.w_shape else None,
                    "w_dtype": e.w_dtype, "w_sum": e.w_sum,
-                   "w_asum": e.w_asum, "wck": None}
+                   "w_asum": e.w_asum, "stack": e.stack,
+                   "w_view": e.w_view, "wck": None}
             if isinstance(e.wck, WeightChecksums):
                 doc["wck"] = {"kind": "matmul",
                               "col_chunk": int(e.wck.col_chunk)}
@@ -383,8 +577,169 @@ class ProtectionPlan:
                 wck=wck,
                 w_shape=tuple(doc["w_shape"]) if doc["w_shape"] else None,
                 w_dtype=doc["w_dtype"], w_sum=doc.get("w_sum"),
-                w_asum=doc.get("w_asum"))
+                w_asum=doc.get("w_asum"), stack=doc.get("stack", 0),
+                w_view=doc.get("w_view"))
         return cls(entries=entries, meta=raw.get("meta", {}))
+
+
+# --------------------------------------------------------------------------
+# the protection spec (the model-agnostic middle layer)
+# --------------------------------------------------------------------------
+
+TAU_DEFAULT = 32.0
+TAU_FLOOR, TAU_CAP = 12.0, 64.0
+_TAU_REF_K = 1024  # contraction depth at which the calibrated factor
+                   # equals the historical global default
+
+
+def calibrate_tau_factor(k_dim: int) -> float:
+    """Per-layer detection safety factor from the layer's contraction
+    depth (the ROADMAP's per-layer-thresholds item).
+
+    The thresholds.py noise model already scales with sqrt(K); the safety
+    *factor* absorbs what the model does not capture - the tail risk of
+    the accumulation-order random walk, which also grows with the number
+    of accumulated terms. Shallow layers therefore get a tighter factor
+    (more sensitive detection) and deep ones a looser one, clipped so the
+    tightest setting still sits ~48x above the subthreshold negative
+    control's delta (injection.SUBTHRESHOLD_REL) and the loosest never
+    exceeds 2x the historical global default."""
+    import math
+    f = TAU_DEFAULT * math.sqrt(max(int(k_dim), 1) / _TAU_REF_K)
+    return round(min(TAU_CAP, max(TAU_FLOOR, f)), 3)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSite:
+    """One protectable GEMM/conv in a model, identified by its stable
+    param-tree path - the unit the offline compiler decides about."""
+    path: str
+    op: OpSpec
+    k_dim: int                       # contraction depth (tau calibration)
+    shape: Optional[OpShape] = None  # conv geometry (SS4.3 policy/profile)
+    stack: int = 0                   # leading stack axes on the leaf
+    w_view: Optional[str] = None     # W_VIEWS derivation of the GEMM weight
+    optional: bool = True            # skip silently when params lack it
+
+
+@dataclasses.dataclass
+class ProtectionSpec:
+    """Model-agnostic protection spec: the ordered op sites plus the base
+    ProtectConfig they start from. Derived from a CNNConfig or a
+    transformer ModelConfig by `protection_spec`; `build_plan` compiles it
+    against concrete params."""
+    sites: List[OpSite]
+    base: ProtectConfig = DEFAULT_CONFIG
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def _attn_kind(kind: str) -> bool:
+    return kind.startswith("attn")
+
+
+def _block_sites(prefix: str, kind: str, cfg, stack: int) -> List[OpSite]:
+    """GEMM sites of one transformer block, keyed by the exact param-tree
+    paths models.transformer.init_params creates."""
+    d, hd = cfg.d_model, cfg.head_dim
+    mm = OpSpec("matmul")
+
+    def site(rel, k_dim, op=mm):
+        return OpSite(f"{prefix}/{rel}", op, k_dim, stack=stack)
+
+    if _attn_kind(kind):
+        return [site("attn/wq", d), site("attn/wk", d), site("attn/wv", d),
+                site("attn/wo", cfg.num_heads * hd)]
+    if kind == "ffn":
+        return [site("ffn/gate", d), site("ffn/up", d),
+                site("ffn/down", cfg.d_ff)]
+    if kind == "moe":
+        ff = cfg.moe_d_ff or cfg.d_ff
+        g = OpSpec("grouped_matmul")
+        sites = [site("moe/router", d), site("moe/gate", d, g),
+                 site("moe/up", d, g), site("moe/down", ff, g)]
+        if cfg.n_shared_experts:
+            sites += [site("moe/shared/gate", d), site("moe/shared/up", d),
+                      site("moe/shared/down", ff * cfg.n_shared_experts)]
+        return sites
+    if kind == "ssm":
+        di = cfg.ssm_expand * d
+        return [site("ssm/in_proj", d), site("ssm/out_proj", di)]
+    if kind == "rec":
+        w = cfg.lru_width or d
+        return [site("rec/in_x", d), site("rec/in_gate", d),
+                site("rec/gate_a", w), site("rec/gate_i", w),
+                site("rec/out", w)]
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def _cnn_spec(arch_cfg, batch: int) -> ProtectionSpec:
+    base = (DEFAULT_CONFIG if getattr(arch_cfg, "abft", True)
+            else DEFAULT_CONFIG.replace(enabled=False))
+    sites: List[OpSite] = []
+    img, ch = arch_cfg.img, arch_cfg.in_ch
+    for i, spec in enumerate(arch_cfg.convs):
+        e = (img + 2 * spec.pad - spec.kernel) // spec.stride + 1
+        out = arch_cfg.scaled(spec.out_ch)
+        sites.append(OpSite(
+            f"conv{i}", OpSpec("conv", stride=spec.stride, pad=spec.pad),
+            k_dim=ch * spec.kernel ** 2,
+            shape=OpShape(n=batch, m=out, ch=ch, r=spec.kernel, h=e),
+            optional=False))
+        img = e // spec.pool if spec.pool else e
+        ch = out
+    sites.append(OpSite("fc", OpSpec("matmul"), k_dim=ch,
+                        shape=OpShape(n=batch,
+                                      m=getattr(arch_cfg, "num_classes",
+                                                1000), ch=ch)))
+    meta = {"arch": getattr(arch_cfg, "name", "?"), "batch": batch,
+            "img": arch_cfg.img, "in_ch": arch_cfg.in_ch}
+    return ProtectionSpec(sites=sites, base=base, meta=meta)
+
+
+def _transformer_spec(cfg, batch: int) -> ProtectionSpec:
+    base = ProtectConfig(enabled=cfg.abft,
+                         row_chunk=cfg.abft_row_chunk,
+                         col_chunk=cfg.abft_col_chunk,
+                         detect_only=cfg.abft_detect_only)
+    pattern, reps, rem = cfg.stages()
+    sites: List[OpSite] = []
+    for i, kind in enumerate(cfg.prefix_pattern):
+        sites += _block_sites(f"prefix/b{i}_{kind}", kind, cfg, stack=0)
+    if reps:
+        for i, kind in enumerate(pattern):
+            sites += _block_sites(f"stages/b{i}_{kind}", kind, cfg, stack=1)
+    for i, kind in enumerate(rem):
+        sites += _block_sites(f"rem/b{i}_{kind}", kind, cfg, stack=0)
+    if cfg.tie_embeddings:
+        sites.append(OpSite("embed/table", OpSpec("matmul"),
+                            k_dim=cfg.d_model, w_view="tied_head",
+                            optional=False))
+    else:
+        sites.append(OpSite("embed/head", OpSpec("matmul"),
+                            k_dim=cfg.d_model, optional=False))
+    meta = {"arch": getattr(cfg, "name", "?"), "batch": batch,
+            "family": getattr(cfg, "family", "?"),
+            "stage_repeats": reps}
+    return ProtectionSpec(sites=sites, base=base, meta=meta)
+
+
+def protection_spec(arch_cfg, batch: int = 8) -> ProtectionSpec:
+    """Derive the model-agnostic ProtectionSpec from an architecture
+    config: a models.cnn.CNNConfig (`.convs` walk) or a transformer
+    configs.base.ModelConfig (`.stages()` walk over the param tree's
+    stable block paths). The spec is what build_plan actually compiles -
+    per arXiv:2104.09455, variant selection is a per-layer-shape decision
+    independent of the model family."""
+    if isinstance(arch_cfg, ProtectionSpec):
+        return arch_cfg
+    if hasattr(arch_cfg, "convs"):
+        return _cnn_spec(arch_cfg, batch)
+    if hasattr(arch_cfg, "stages"):
+        return _transformer_spec(arch_cfg, batch)
+    raise TypeError(
+        "protection_spec expects a CNNConfig (.convs), a transformer "
+        f"ModelConfig (.stages) or a ProtectionSpec; got "
+        f"{type(arch_cfg).__name__}")
 
 
 # --------------------------------------------------------------------------
@@ -399,17 +754,54 @@ def _fingerprint(entry: PlanEntry, w) -> None:
         entry.w_asum = float(jnp.sum(jnp.abs(w32)))
 
 
+def stacked_weight_checksums_matmul(w, col_chunk: int) -> WeightChecksums:
+    """Offline checksums of a stacked (reps, K, M) weight: one encode per
+    repeat slice (vmapped), stored with a matching leading reps axis so
+    the scan can thread per-repeat checksums through its xs. The at-rest
+    audit (runtime.ft) re-encodes through this same function, so the
+    offline and audit recipes cannot drift."""
+    cw1, cw2 = jax.vmap(
+        lambda ww: tuple(weight_checksums_matmul(ww, col_chunk))[:2])(w)
+    return WeightChecksums(cw1, cw2,
+                           pick_chunk(w.shape[-1], col_chunk))
+
+
+def _site_entry(site: OpSite, w, cfg: ProtectConfig) -> PlanEntry:
+    """Compile one OpSite against its (possibly absent) weight leaf."""
+    if site.op.kind == "conv":
+        e = conv_entry(site.path, w, cfg, stride=site.op.stride,
+                       pad=site.op.pad, groups=site.op.groups)
+    elif site.op.kind == "grouped_matmul":
+        e = grouped_matmul_entry(site.path, w, cfg)
+    elif w is None:
+        e = PlanEntry(site.path, site.op, cfg)
+    elif site.stack:
+        e = PlanEntry(site.path, site.op, cfg,
+                      wck=stacked_weight_checksums_matmul(w, cfg.col_chunk),
+                      w_shape=tuple(w.shape), w_dtype=str(w.dtype))
+    else:
+        e = matmul_entry(site.path, w, cfg)
+    e.stack = site.stack
+    e.w_view = site.w_view
+    _fingerprint(e, w)
+    return e
+
+
 def build_plan(params, arch_cfg, cost_model: Optional[CostModel] = None,
-               batch: int = 8, profile_kernels: bool = False
-               ) -> ProtectionPlan:
+               batch: int = 8, profile_kernels: bool = False,
+               calibrate_tau: bool = True) -> ProtectionPlan:
     """Compile a model-level protection plan (the offline phase).
 
-    Walks `arch_cfg` (a models.cnn.CNNConfig-shaped object: `.convs`,
-    `.img`, `.in_ch`, `.abft`, `.scaled()`), decides RC/ClC per layer from
-    the SS4.3 cost model, and - when `params` is given - precomputes every
-    layer's weight checksums keyed by param-tree path. `params=None`
-    builds a policy-only plan (no checksums; the legacy layer_policies
-    shim uses this).
+    `arch_cfg` may be a CNNConfig, a transformer ModelConfig, or an
+    already-derived ProtectionSpec - `protection_spec` walks either model
+    family to the same site list, so one compiler serves both. Per site it
+    decides RC/ClC from the SS4.3 cost model (conv sites), calibrates the
+    per-layer detection threshold factor from the contraction depth
+    (`calibrate_tau_factor`; persisted in each entry's cfg), and - when
+    `params` is given - precomputes the weight checksums keyed by
+    param-tree path (scanned-stage sites are encoded per repeat slice,
+    stored stacked). `params=None` builds a policy-only plan (no
+    checksums; the legacy layer_policies shim uses this).
 
     `profile_kernels=True` runs the measured calibration pass
     (policy.profile_*_kernel): per layer shape it times the plain XLA op
@@ -418,48 +810,50 @@ def build_plan(params, arch_cfg, cost_model: Optional[CostModel] = None,
     config - the profile-guided step the arithmetic-intensity ABFT work
     argues for. The timings land in `meta["kernel_profile"]`.
     """
-    if not hasattr(arch_cfg, "convs"):
-        raise TypeError("build_plan expects a CNN architecture config with "
-                        f".convs; got {type(arch_cfg).__name__}")
-    base = (DEFAULT_CONFIG if getattr(arch_cfg, "abft", True)
-            else DEFAULT_CONFIG.replace(enabled=False))
+    spec = protection_spec(arch_cfg, batch=batch)
+    base = spec.base
     entries: Dict[str, PlanEntry] = {}
     kprof: Dict[str, dict] = {}
-    img, ch = arch_cfg.img, arch_cfg.in_ch
-    for i, spec in enumerate(arch_cfg.convs):
-        e = (img + 2 * spec.pad - spec.kernel) // spec.stride + 1
-        out = arch_cfg.scaled(spec.out_ch)
-        shape = OpShape(n=batch, m=out, ch=ch, r=spec.kernel, h=e)
-        rc, clc = decide_rc_clc(shape, cost_model)
-        cfg = base.replace(rc_enabled=rc, clc_enabled=clc)
-        name = f"conv{i}"
-        if profile_kernels and cfg.enabled:
-            prof = profile_conv_detect_kernel((batch, out, e, e))
+    for site in spec.sites:
+        w = None
+        if params is not None:
+            try:
+                w = apply_w_view(weight_leaf(params, site.path), site.w_view)
+            except KeyError:
+                if site.optional:
+                    continue
+                raise KeyError(
+                    f"build_plan: params have no leaf at {site.path!r} "
+                    "(spec/params mismatch)")
+        cfg = base
+        if calibrate_tau and cfg.enabled:
+            cfg = cfg.replace(tau_factor=calibrate_tau_factor(site.k_dim))
+        if site.op.kind == "conv" and site.shape is not None:
+            rc, clc = decide_rc_clc(site.shape, cost_model)
+            cfg = cfg.replace(rc_enabled=rc, clc_enabled=clc)
+        if profile_kernels and cfg.enabled and site.shape is not None:
+            s = site.shape
+            if site.op.kind == "conv":
+                prof = profile_conv_detect_kernel((s.n, s.m, s.h, s.h))
+            else:
+                m = w.shape[-1] if w is not None else s.m
+                prof = profile_matmul_kernel(s.n, s.ch, m)
             cfg = cfg.replace(use_fused_kernel=prof.use_fused,
                               kernel_tiles=prof.tiles)
-            kprof[name] = prof.doc()
-        w = params[name]["w"] if params is not None else None
-        entries[name] = conv_entry(name, w, cfg, stride=spec.stride,
-                                   pad=spec.pad)
-        _fingerprint(entries[name], w)
-        img = e // spec.pool if spec.pool else e
-        ch = out
-    if params is None or "fc" in params:
-        w = params["fc"]["w"] if params is not None else None
-        fc_cfg = base
-        if profile_kernels and base.enabled:
-            classes = (w.shape[1] if w is not None
-                       else getattr(arch_cfg, "num_classes", 1000))
-            prof = profile_matmul_kernel(batch, ch, classes)
-            fc_cfg = base.replace(use_fused_kernel=prof.use_fused,
-                                  kernel_tiles=prof.tiles)
-            kprof["fc"] = prof.doc()
-        entries["fc"] = matmul_entry("fc", w, fc_cfg)
-        _fingerprint(entries["fc"], w)
+            kprof[site.path] = prof.doc()
+        entries[site.path] = _site_entry(site, w, cfg)
     model = cost_model or CostModel()
-    meta = {"arch": getattr(arch_cfg, "name", "?"), "batch": batch,
-            "cost_model": {"alpha": model.alpha, "beta": model.beta},
-            "img": arch_cfg.img, "in_ch": arch_cfg.in_ch}
+    meta = dict(spec.meta)
+    meta["cost_model"] = {"alpha": model.alpha, "beta": model.beta}
     if profile_kernels:
         meta["kernel_profile"] = kprof
+        if not kprof and entries:
+            # transformer OpSites carry no OpShape yet (ROADMAP open
+            # item), so there is nothing to profile - say so instead of
+            # letting the caller believe the calibration pass ran
+            logging.getLogger("repro.plan").warning(
+                "build_plan(profile_kernels=True): no profilable sites "
+                "in this spec (kernel profiling currently covers "
+                "CNN-style sites with an OpShape); plan built without "
+                "kernel pinning")
     return ProtectionPlan(entries=entries, meta=meta)

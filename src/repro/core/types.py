@@ -65,6 +65,41 @@ class DetectEvidence(NamedTuple):
         return DetectEvidence(jnp.zeros((), jnp.int32),
                               jnp.zeros((), jnp.float32))
 
+    @staticmethod
+    def merge(a: "DetectEvidence", b: "DetectEvidence") -> "DetectEvidence":
+        return DetectEvidence(jnp.maximum(a.flag, b.flag),
+                              jnp.maximum(a.score, b.score))
+
+
+def clean_report(mode: Optional[str] = None):
+    """The identity element for verdict merging in a given protect mode:
+    DetectEvidence under "detect_only", FaultReport otherwise. Lets layer
+    walks (and the transformer scan carry) initialise one accumulator that
+    works in every ProtectedModel execution mode."""
+    return DetectEvidence.clean() if mode == "detect_only" \
+        else FaultReport.clean()
+
+
+def merge_verdicts(a, b):
+    """Merge two per-op carries of the SAME kind: FaultReport with
+    FaultReport (the per-layer/correct modes) or DetectEvidence with
+    DetectEvidence (the detect-only pass of the deferred workflow).
+    ModelReports are collapsed to their scalar view first, so call sites
+    that used FaultReport.merge(a, r.merged()) keep one spelling."""
+    if isinstance(a, ModelReport):
+        a = a.merged()
+    if isinstance(b, ModelReport):
+        b = b.merged()
+    if isinstance(a, DetectEvidence) or isinstance(b, DetectEvidence):
+        if not (isinstance(a, DetectEvidence)
+                and isinstance(b, DetectEvidence)):
+            raise TypeError(
+                "merge_verdicts: cannot mix DetectEvidence with "
+                f"FaultReport ({type(a).__name__} vs {type(b).__name__}); "
+                "a detect-only pass must stay detect-only end to end")
+        return DetectEvidence.merge(a, b)
+    return FaultReport.merge(a, b)
+
 
 def scheme_histogram(corrected_by) -> dict:
     """Host-side histogram of a batched `corrected_by` field: scheme name ->
@@ -141,10 +176,16 @@ class ModelReport:
         return tuple(self.by_layer)
 
     def merged(self) -> FaultReport:
-        """Model-level FaultReport (max over layers, the old contract)."""
+        """Model-level FaultReport (max over layers, the old contract).
+        A report holding DetectEvidence leaves (the detect-only pass of
+        the deferred workflow) merges to a scalar DetectEvidence."""
         if not self.by_layer:
             return FaultReport.clean()
         reps = list(self.by_layer.values())
+        if isinstance(reps[0], DetectEvidence):
+            return DetectEvidence(
+                jnp.max(jnp.stack([r.flag for r in reps])),
+                jnp.max(jnp.stack([r.score for r in reps])))
         return FaultReport(
             jnp.max(jnp.stack([r.detected for r in reps])),
             jnp.max(jnp.stack([r.corrected_by for r in reps])),

@@ -74,6 +74,109 @@ def run_ladder(
     return o, report
 
 
+class ProtectedModel:
+    """The model-agnostic protection session: one surface for every model
+    family (paper SS4.3's offline-per-layer, model-shape-independent
+    workflow, lifted to the API).
+
+        plan = build_plan(params, arch_cfg)        # offline, either family
+        pm = ProtectedModel(apply_fn, plan)
+        out, report = pm(params, x)                          # per-layer
+        out, report = pm(params, x, correction="deferred")   # one cond
+
+    `apply_fn(params, *args, **kwargs) -> (out, report)` is any forward
+    whose protected call sites resolve their PlanEntry from the ambient
+    plan context (layers.linear.apply_dense and friends do; protect_site
+    is the raw spelling). The report must be a ModelReport (or a single
+    scalar carry) of FaultReports - or of DetectEvidence when the ambient
+    mode is "detect_only", which is how the deferred workflow's detect
+    pass surfaces its compact per-path carries (a lax.scan model carries
+    them through its stage carry).
+
+    `correction="deferred"` runs apply_fn detect-only and executes ONE
+    model-level lax.cond that reruns it with full correction only when
+    any site flagged - the same jaxpr shape for a CNN layer walk and a
+    scanned transformer. In the corrective rerun, sites whose exact path
+    produced a detect-pass carry trust that flag (no re-detection); sites
+    whose evidence merged into a coarser carry (inside a scan) re-derive
+    their own gate.
+    """
+
+    def __init__(self, apply_fn: Callable, plan=None):
+        from .plan import ProtectionPlan  # circular-import-free at call time
+        if plan is not None and not isinstance(plan, ProtectionPlan):
+            raise TypeError("ProtectedModel expects a ProtectionPlan "
+                            f"(or None); got {type(plan).__name__}")
+        self.apply_fn = apply_fn
+        self.plan = plan
+
+    @staticmethod
+    def _layer_map(rep, what: str):
+        if isinstance(rep, T.ModelReport):
+            return dict(rep.by_layer)
+        if isinstance(rep, (T.FaultReport, T.DetectEvidence)):
+            return {"model": rep}
+        raise TypeError(f"ProtectedModel: apply_fn's {what} report must be "
+                        "a ModelReport, FaultReport or DetectEvidence; got "
+                        f"{type(rep).__name__}")
+
+    def __call__(self, params, *args, correction: str = "per_layer",
+                 **kwargs):
+        from .plan import plan_scope
+        if correction not in ("per_layer", "deferred"):
+            raise ValueError(f"ProtectedModel: unknown correction mode "
+                             f"{correction!r} (have 'per_layer', "
+                             "'deferred')")
+        if correction == "per_layer":
+            with plan_scope(self.plan):
+                return self.apply_fn(params, *args, **kwargs)
+
+        # ---- deferred: detect-only pass + ONE model-level cond ----------
+        with plan_scope(self.plan, mode="detect_only"):
+            out_d, ev = self.apply_fn(params, *args, **kwargs)
+        evmap = self._layer_map(ev, "detect-only")
+        bad = [n for n, e in evmap.items()
+               if not isinstance(e, T.DetectEvidence)]
+        if bad:
+            raise TypeError(
+                "ProtectedModel deferred mode: the detect-only pass "
+                f"returned non-DetectEvidence carries for {sorted(bad)}; "
+                "some protected op bypassed the ambient execution mode "
+                "(e.g. a direct protected_matmul call) - route it through "
+                "protect_site / apply_dense so the ladder is not traced "
+                "on the hot path")
+        names = list(evmap)
+        if not names:
+            return out_d, T.ModelReport({}, mode="deferred")
+        flags = jnp.stack([evmap[n].flag for n in names])
+
+        def _corrective():
+            # the rerun trusts the detect-pass flags at every path that
+            # carried one (the ladder re-verifies against fresh checksums
+            # anyway); scan-merged paths re-detect inside the branch
+            carried = {n: evmap[n].flag > 0 for n in names}
+            with plan_scope(self.plan, mode="correct", detected=carried):
+                out_c, rep = self.apply_fn(params, *args, **kwargs)
+            repmap = {n: T.as_fault_report(r) for n, r in
+                      self._layer_map(rep, "corrective").items()}
+            if set(repmap) != set(names):
+                raise ValueError(
+                    "ProtectedModel: the corrective rerun reported layers "
+                    f"{sorted(repmap)} but the detect pass carried "
+                    f"{sorted(names)}; apply_fn must be "
+                    "mode-deterministic")
+            by = jnp.stack([repmap[n].corrected_by for n in names])
+            resid = jnp.stack([repmap[n].residual for n in names])
+            return out_c, by, resid
+
+        out, by, resid = run_deferred(jnp.max(flags) > 0, out_d,
+                                      _corrective, len(names))
+        rep = T.ModelReport(
+            {n: T.FaultReport(flags[i], by[i], resid[i])
+             for i, n in enumerate(names)}, mode="deferred")
+        return out, rep
+
+
 def run_deferred(any_flag, clean_out, correct_fn: Callable, n_layers: int):
     """The multischeme workflow lifted to model granularity (the paper's
     Fig. 7 fuse-then-defer discipline, in-graph): the forward ran every

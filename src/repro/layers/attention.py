@@ -14,7 +14,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import FaultReport, ProtectConfig
+from repro.core import FaultReport, ProtectConfig, merge_verdicts
 from .linear import apply_dense, init_dense
 from .norms import rms_norm, softcap
 from .rotary import apply_rope, rope_tables
@@ -111,10 +111,10 @@ def apply_attention(
     hd, hq, hkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
     g = cfg.q_per_kv
 
-    q, r1 = apply_dense(params["wq"], x, abft)
-    k, r2 = apply_dense(params["wk"], x, abft)
-    v, r3 = apply_dense(params["wv"], x, abft)
-    rep = FaultReport.merge(FaultReport.merge(r1, r2), r3)
+    q, r1 = apply_dense(params["wq"], x, abft, name="wq")
+    k, r2 = apply_dense(params["wk"], x, abft, name="wk")
+    v, r3 = apply_dense(params["wv"], x, abft, name="wv")
+    rep = merge_verdicts(merge_verdicts(r1, r2), r3)
 
     q = q.reshape(b, s, hq, hd)
     k = k.reshape(b, s, hkv, hd)
@@ -159,8 +159,8 @@ def apply_attention(
         new_cache = None
 
     out = out.reshape(b, s, hq * hd)
-    y, r4 = apply_dense(params["wo"], out, abft)
-    return y, FaultReport.merge(rep, r4), new_cache
+    y, r4 = apply_dense(params["wo"], out, abft, name="wo")
+    return y, merge_verdicts(rep, r4), new_cache
 
 
 def init_cache(cfg, kind: str, batch: int, max_len: int, dtype=jnp.bfloat16):

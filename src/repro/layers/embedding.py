@@ -2,9 +2,13 @@
 
 Embedding lookup is a gather (no weight-stationary linear invariant - it
 is one-hot @ W but the one-hot side is data; noted in DESIGN.md); the LM
-head GEMM *is* protected. MusicGen-style multi-codebook I/O: K embedding
-tables summed on input, K protected heads on output (the EnCodec frontend
-is a stub per the assignment - tokens arrive precomputed).
+head GEMM *is* protected, through the unified protect_op path: the plan
+entry at "embed/head" (untied) or "embed/table" (tied, via the
+plan.W_VIEWS "tied_head" derivation, so the head checksums are encoded
+offline from the embedding table leaf). MusicGen-style multi-codebook
+I/O: K embedding tables summed on input, K protected heads on output
+(the EnCodec frontend is a stub per the assignment - tokens arrive
+precomputed).
 """
 from __future__ import annotations
 
@@ -13,7 +17,8 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import FaultReport, ProtectConfig
+from repro.core import (FaultReport, ProtectConfig, ambient_mode,
+                        path_scope, protect_site, resolve_entry)
 from .linear import apply_dense, init_dense
 
 F32 = jnp.float32
@@ -42,21 +47,25 @@ def embed(params: Dict, tokens: jnp.ndarray, cfg) -> jnp.ndarray:
 
 
 def logits_head(params: Dict, x: jnp.ndarray, cfg,
-                abft: ProtectConfig) -> Tuple[jnp.ndarray, FaultReport]:
+                abft: ProtectConfig = None
+                ) -> Tuple[jnp.ndarray, FaultReport]:
     """x: (B, S, d) -> (B, S, V) or (B, S, K, V)."""
     b, s, d = x.shape
     v = cfg.vocab_size
     nc = max(cfg.num_codebooks, 1)
-    if cfg.tie_embeddings:
-        w = params["table"].reshape(nc * v, d).T           # (d, nc*V)
-        from repro.core import protected_matmul
-        if abft is not None and abft.enabled:
-            y, rep = protected_matmul(x, w, cfg=abft)
+    with path_scope("embed"):
+        if cfg.tie_embeddings:
+            w = params["table"].reshape(nc * v, d).T       # (d, nc*V)
+            entry = resolve_entry("table")
+            if (entry is not None or ambient_mode() is not None
+                    or (abft is not None and abft.enabled)):
+                y, rep = protect_site("table", (x, w), entry=entry,
+                                      cfg=abft)
+            else:
+                y = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+                rep = FaultReport.clean()
         else:
-            y = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
-            rep = FaultReport.clean()
-    else:
-        y, rep = apply_dense(params["head"], x, abft)
+            y, rep = apply_dense(params["head"], x, abft, name="head")
     y = y.astype(F32)
     if cfg.num_codebooks:
         return y.reshape(b, s, nc, v), rep

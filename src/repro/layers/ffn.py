@@ -6,7 +6,8 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import ModelReport, ProtectConfig
+from repro.core import (DetectEvidence, ModelReport, ProtectConfig,
+                        merge_verdicts)
 from .linear import apply_dense, init_dense
 from .norms import activate
 
@@ -21,10 +22,13 @@ def init_ffn(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Dict:
     }
 
 
-def apply_ffn(params: Dict, x: jnp.ndarray, abft: ProtectConfig,
+def apply_ffn(params: Dict, x: jnp.ndarray, abft: ProtectConfig = None,
               act: str = "silu") -> Tuple[jnp.ndarray, ModelReport]:
-    g, r1 = apply_dense(params["gate"], x, abft)
-    u, r2 = apply_dense(params["up"], x, abft)
+    g, r1 = apply_dense(params["gate"], x, abft, name="gate")
+    u, r2 = apply_dense(params["up"], x, abft, name="up")
     h = activate(g, act) * u
-    y, r3 = apply_dense(params["down"], h, abft)
+    y, r3 = apply_dense(params["down"], h, abft, name="down")
+    if isinstance(r1, DetectEvidence):
+        # detect-only pass: the compact scan-carry form, merged
+        return y, merge_verdicts(merge_verdicts(r1, r2), r3)
     return y, ModelReport({"gate": r1, "up": r2, "down": r3})

@@ -21,9 +21,24 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import FaultReport, ProtectConfig, protected_grouped_matmul
+from repro.core import (FaultReport, OpSpec, ProtectConfig, ambient_mode,
+                        merge_verdicts, path_scope, protect_site,
+                        protected_grouped_matmul, resolve_entry)
 from .linear import apply_dense, init_dense
 from .norms import activate
+
+_GROUPED = OpSpec("grouped_matmul")
+
+
+def _grouped(name: str, h, w, abft):
+    """One expert-batched GEMM through the unified plan path: the ambient
+    PlanEntry (policy per path; per-group checksums stay runtime-derived,
+    SS5.2 exact-group invariants) or the threaded abft config."""
+    entry = resolve_entry(name)
+    if entry is not None or ambient_mode() is not None:
+        return protect_site(name, (h, w), entry=entry, op=_GROUPED,
+                            cfg=abft)
+    return protected_grouped_matmul(h, w, abft)
 
 F32 = jnp.float32
 
@@ -54,7 +69,8 @@ def apply_moe(params: Dict, x: jnp.ndarray, cfg,
     t = b * s
     xt = x.reshape(t, d)
 
-    logits, rep = apply_dense(params["router"], xt.astype(F32), abft)
+    logits, rep = apply_dense(params["router"], xt.astype(F32), abft,
+                              name="router")
     probs = jax.nn.softmax(logits.astype(F32), axis=-1)            # (T, E)
     top_w, top_e = jax.lax.top_k(probs, k)                         # (T, k)
     top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
@@ -83,12 +99,12 @@ def apply_moe(params: Dict, x: jnp.ndarray, cfg,
     from repro.runtime.sharding import maybe_constrain
     h = maybe_constrain(h, "model", "data", None)
 
-    g, r1 = protected_grouped_matmul(h, params["gate"], abft)
-    u, r2 = protected_grouped_matmul(h, params["up"], abft)
+    g, r1 = _grouped("gate", h, params["gate"], abft)
+    u, r2 = _grouped("up", h, params["up"], abft)
     act = activate(g, cfg.act) * u
-    y, r3 = protected_grouped_matmul(act, params["down"], abft)
+    y, r3 = _grouped("down", act, params["down"], abft)
     for r in (r1, r2, r3):
-        rep = FaultReport.merge(rep, r)
+        rep = merge_verdicts(rep, r)
 
     yb = jnp.concatenate([y.reshape(e * cap, d),
                           jnp.zeros((1, d), y.dtype)], axis=0)
@@ -100,8 +116,9 @@ def apply_moe(params: Dict, x: jnp.ndarray, cfg,
 
     if "shared" in params:
         from .ffn import apply_ffn
-        ys, rs = apply_ffn(params["shared"], xt, abft, cfg.act)
+        with path_scope("shared"):
+            ys, rs = apply_ffn(params["shared"], xt, abft, cfg.act)
         out = out + ys.astype(F32)
-        rep = FaultReport.merge(rep, rs.merged())
+        rep = merge_verdicts(rep, rs)
 
     return out.astype(x.dtype).reshape(b, s, d), rep, aux

@@ -14,7 +14,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import FaultReport, ProtectConfig
+from repro.core import FaultReport, ProtectConfig, merge_verdicts
 from .linear import apply_dense, init_dense
 from .norms import activate
 from .ssm import _causal_conv
@@ -61,16 +61,16 @@ def apply_rglru(params: Dict, x: jnp.ndarray, cfg, abft: ProtectConfig,
     b, s, d = x.shape
     w = cfg.lru_width or cfg.d_model
 
-    xb, r1 = apply_dense(params["in_x"], x, abft)
-    gb, r2 = apply_dense(params["in_gate"], x, abft)
-    rep = FaultReport.merge(r1, r2)
+    xb, r1 = apply_dense(params["in_x"], x, abft, name="in_x")
+    gb, r2 = apply_dense(params["in_gate"], x, abft, name="in_gate")
+    rep = merge_verdicts(r1, r2)
 
     tail = state["conv"] if state is not None else None
     xc, new_tail = _causal_conv(xb, params["conv_w"], tail)
 
-    ra, r3 = apply_dense(params["gate_a"], xc, abft)
-    ri, r4 = apply_dense(params["gate_i"], xc, abft)
-    rep = FaultReport.merge(FaultReport.merge(rep, r3), r4)
+    ra, r3 = apply_dense(params["gate_a"], xc, abft, name="gate_a")
+    ri, r4 = apply_dense(params["gate_i"], xc, abft, name="gate_i")
+    rep = merge_verdicts(merge_verdicts(rep, r3), r4)
 
     r_t = jax.nn.sigmoid(ra.astype(F32))
     i_t = jax.nn.sigmoid(ri.astype(F32))
@@ -88,8 +88,8 @@ def apply_rglru(params: Dict, x: jnp.ndarray, cfg, abft: ProtectConfig,
     h_last = h[:, -1]
 
     y = h.astype(x.dtype) * activate(gb, "gelu")
-    out, r5 = apply_dense(params["out"], y, abft)
-    rep = FaultReport.merge(rep, r5)
+    out, r5 = apply_dense(params["out"], y, abft, name="out")
+    rep = merge_verdicts(rep, r5)
 
     new_state = None
     if state is not None:

@@ -17,7 +17,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import FaultReport, ProtectConfig
+from repro.core import FaultReport, ProtectConfig, merge_verdicts
 from .linear import apply_dense, init_dense
 from .norms import rms_norm
 
@@ -129,7 +129,7 @@ def apply_ssm(params: Dict, x: jnp.ndarray, cfg, abft: ProtectConfig,
     b, s, d = x.shape
     d_inner, h, p, n = _dims(cfg)
 
-    zxbcdt, rep = apply_dense(params["in_proj"], x, abft)
+    zxbcdt, rep = apply_dense(params["in_proj"], x, abft, name="in_proj")
     z, xin, bmat, cmat, dt = jnp.split(
         zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
         axis=-1)
@@ -172,8 +172,8 @@ def apply_ssm(params: Dict, x: jnp.ndarray, cfg, abft: ProtectConfig,
     y = y.reshape(b, s, d_inner)
     y = y * jax.nn.silu(z.astype(F32))
     y = rms_norm(y.astype(x.dtype), params["norm"], cfg.norm_eps)
-    out, r2 = apply_dense(params["out_proj"], y, abft)
-    rep = FaultReport.merge(rep, r2)
+    out, r2 = apply_dense(params["out_proj"], y, abft, name="out_proj")
+    rep = merge_verdicts(rep, r2)
 
     new_state = None
     if state is not None:

@@ -15,10 +15,10 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import (DEFAULT_CONFIG, FaultReport, ModelReport,
-                        ProtectConfig, ProtectionPlan, build_plan, conv_entry,
-                        matmul_entry, protect_op)
-from repro.core.workflow import run_deferred
+from repro.core import (DEFAULT_CONFIG, ModelReport, ProtectConfig,
+                        ProtectedModel, ProtectionPlan, build_plan,
+                        conv_entry, protect_site, resolve_entry)
+from repro.core.plan import ambient_plan
 
 F32 = jnp.float32
 
@@ -134,31 +134,40 @@ def _maxpool(x: jnp.ndarray, k: int) -> jnp.ndarray:
 def _forward_pass(params: Dict, x: jnp.ndarray, cfg: CNNConfig,
                   policies: Optional[Sequence[ProtectConfig]],
                   inject_layer: int, inject_o,
-                  plan: Optional[ProtectionPlan],
-                  mode: Optional[str],
-                  detected: Optional[Dict] = None,
                   ) -> Tuple[jnp.ndarray, List[str], List]:
     """The shared layer walk behind both correction regimes: returns
     (logits, protected-layer names, per-layer carries) where the carries
-    are FaultReports (mode None/"correct") or DetectEvidence
-    ("detect_only"). `detected` maps layer names to carried CoC-D flags
-    (the deferred rerun trusts the detect pass instead of re-detecting)."""
+    are FaultReports (ambient mode None/"correct") or DetectEvidence
+    ("detect_only"). Entries resolve from the ambient plan context (the
+    ProtectedModel session); without a plan, each conv builds a per-call
+    entry from `policies[i]` / the arch default. Execution mode and the
+    deferred rerun's carried CoC-D flags are ambient too - this walk is
+    model code, not workflow code."""
     names: List[str] = []
     carries: List[Any] = []
     feats = []
     for i, spec in enumerate(cfg.convs):
         name = f"conv{i}"
-        entry = plan[name] if plan is not None else conv_entry(
-            name, cfg=(policies[i] if policies is not None else
-                       (DEFAULT_CONFIG if cfg.abft else
-                        DEFAULT_CONFIG.replace(enabled=False))),
-            stride=spec.stride, pad=spec.pad)
+        entry = resolve_entry(name)
+        if entry is None:
+            if ambient_plan() is not None:
+                # an active plan that skips a conv layer is a plan/arch
+                # mismatch: silently protecting it with the default
+                # config (and a per-call weight encode) would diverge
+                # from the compiled policy - fail like plan[name] used to
+                raise KeyError(
+                    f"forward_cnn: the active ProtectionPlan has no "
+                    f"entry for {name!r}; rebuild the plan with "
+                    "build_plan() or run without one")
+            entry = conv_entry(
+                name, cfg=(policies[i] if policies is not None else
+                           (DEFAULT_CONFIG if cfg.abft else
+                            DEFAULT_CONFIG.replace(enabled=False))),
+                stride=spec.stride, pad=spec.pad)
         o = inject_o if i == inject_layer else None
-        y, r = protect_op(entry.op,
-                          (x, params[name]["w"], params[name]["b"]),
-                          entry=entry, o=o, mode=mode,
-                          detected=None if detected is None
-                          else detected[name])
+        y, r = protect_site(name,
+                            (x, params[name]["w"], params[name]["b"]),
+                            entry=entry, o=o)
         names.append(name)
         carries.append(r)
         if spec.residual_from >= 0:
@@ -178,12 +187,11 @@ def _forward_pass(params: Dict, x: jnp.ndarray, cfg: CNNConfig,
         feats.append(y)
         x = y
     x = jnp.mean(x, axis=(2, 3))                     # global average pool
-    if plan is not None and "fc" in plan:
-        logits, r = protect_op(plan["fc"].op,
-                               (x, params["fc"]["w"], params["fc"]["b"]),
-                               entry=plan["fc"], mode=mode,
-                               detected=None if detected is None
-                               else detected["fc"])
+    fc_entry = resolve_entry("fc")
+    if fc_entry is not None:
+        logits, r = protect_site("fc",
+                                 (x, params["fc"]["w"], params["fc"]["b"]),
+                                 entry=fc_entry)
         names.append("fc")
         carries.append(r)
     else:
@@ -217,41 +225,18 @@ def forward_cnn(params: Dict, x: jnp.ndarray, cfg: CNNConfig,
       one per layer; verdict attribution is preserved via the detect-pass
       flags, and corrected logits are bitwise-identical to the per-layer
       path (the rerun is the per-layer computation).
+
+    forward_cnn is a thin shim over the model-agnostic
+    `core.ProtectedModel` session - the layer walk above is the only
+    CNN-specific part; the deferred workflow, carried flags and report
+    assembly are the same code the transformer runs.
     """
-    if correction not in ("per_layer", "deferred"):
-        raise ValueError(f"forward_cnn: unknown correction mode "
-                         f"{correction!r} (have 'per_layer', 'deferred')")
-    if correction == "per_layer":
-        logits, names, reps = _forward_pass(params, x, cfg, policies,
-                                            inject_layer, inject_o, plan,
-                                            mode=None)
-        return logits, ModelReport(dict(zip(names, reps)))
+    def apply_fn(p, xx):
+        logits, names, carries = _forward_pass(p, xx, cfg, policies,
+                                               inject_layer, inject_o)
+        return logits, ModelReport(dict(zip(names, carries)))
 
-    # ---- deferred: detect-only forward + one model-level cond ------------
-    logits_d, names, evs = _forward_pass(params, x, cfg, policies,
-                                         inject_layer, inject_o, plan,
-                                         mode="detect_only")
-    if not names:
-        return logits_d, ModelReport({}, mode="deferred")
-    flags = jnp.stack([e.flag for e in evs])
-
-    def _corrective_forward():
-        # the rerun trusts the detect-pass flags (no re-detection: the
-        # ladder verifies against freshly derived checksums anyway)
-        carried = {name: evs[i].flag > 0 for i, name in enumerate(names)}
-        logits_c, _, reps = _forward_pass(params, x, cfg, policies,
-                                          inject_layer, inject_o, plan,
-                                          mode="correct", detected=carried)
-        by = jnp.stack([r.corrected_by for r in reps])
-        resid = jnp.stack([r.residual for r in reps])
-        return logits_c, by, resid
-
-    logits, by, resid = run_deferred(jnp.max(flags) > 0, logits_d,
-                                     _corrective_forward, len(names))
-    rep = ModelReport(
-        {name: FaultReport(flags[i], by[i], resid[i])
-         for i, name in enumerate(names)}, mode="deferred")
-    return logits, rep
+    return ProtectedModel(apply_fn, plan)(params, x, correction=correction)
 
 
 def conv_output_at(params: Dict, x: jnp.ndarray, cfg: CNNConfig,

@@ -2,16 +2,30 @@
 ModelConfig (dense GQA / MoE / SSD / RG-LRU hybrid / multi-codebook audio),
 with scan-over-stages + remat for O(stage) HLO size, ABFT protection on
 every weight GEMM, and a unified train / prefill / decode interface.
+
+Protection is model-agnostic: every GEMM call site resolves its PlanEntry
+by param-tree path from the ambient plan context (core.plan_scope), so a
+ProtectedModel built from `train_apply(cfg)` / `prefill_apply(cfg)` runs
+the same offline-compiled workflow as the CNNs - including the deferred
+mode, where the lax.scan over stages carries a compact DetectEvidence
+instead of a FaultReport and ONE model-level cond reruns the corrective
+forward. Scanned-stage entries' offline checksums are threaded through
+the scan's xs (one slice per repeat), so serving pays no per-call weight
+encode.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import FaultReport, ProtectConfig, as_fault_report
+from repro.core import (ModelReport, ProtectConfig, WeightChecksums,
+                        as_fault_report, clean_report, entry_overrides,
+                        merge_verdicts, ambient_mode, path_scope)
+from repro.core.plan import ambient_plan
 from repro.layers.attention import apply_attention, init_attention, init_cache
 from repro.layers.embedding import embed, init_embedding, logits_head
 from repro.layers.ffn import apply_ffn, init_ffn
@@ -132,49 +146,92 @@ def _apply_block(kind: str, bp: Dict, x, cfg, abft, positions,
     aux = jnp.zeros((), F32)
     new_cache = cache
     if kind in ATTN_KINDS:
-        y, rep, new_cache = apply_attention(
-            bp["attn"], h, kind=kind, cfg=cfg, abft=abft,
-            positions=positions, cache=cache, cache_pos=cache_pos)
+        with path_scope("attn"):
+            y, rep, new_cache = apply_attention(
+                bp["attn"], h, kind=kind, cfg=cfg, abft=abft,
+                positions=positions, cache=cache, cache_pos=cache_pos)
     elif kind == "ffn":
-        y, rep = apply_ffn(bp["ffn"], h, abft, cfg.act)
+        with path_scope("ffn"):
+            y, rep = apply_ffn(bp["ffn"], h, abft, cfg.act)
     elif kind == "moe":
-        y, rep, aux = apply_moe(bp["moe"], h, cfg, abft)
+        with path_scope("moe"):
+            y, rep, aux = apply_moe(bp["moe"], h, cfg, abft)
     elif kind == "ssm":
-        y, rep, new_cache = apply_ssm(bp["ssm"], h, cfg, abft, cache)
+        with path_scope("ssm"):
+            y, rep, new_cache = apply_ssm(bp["ssm"], h, cfg, abft, cache)
     elif kind == "rec":
-        y, rep, new_cache = apply_rglru(bp["rec"], h, cfg, abft, cache)
+        with path_scope("rec"):
+            y, rep, new_cache = apply_rglru(bp["rec"], h, cfg, abft, cache)
     else:
         raise ValueError(kind)
     if cfg.use_post_norm:
         y = rms_norm(y, bp["post_norm"], cfg.norm_eps)
     # blocks may return per-op ModelReports (e.g. ffn); the scan carry
-    # needs the fixed-structure scalar view
+    # needs the fixed-structure scalar view (DetectEvidence in the
+    # deferred workflow's detect-only pass)
     return x + y.astype(x.dtype), as_fault_report(rep), new_cache, aux
 
 
 def _apply_blocks(pattern, blocks, x, cfg, abft, positions, caches=None,
                   cache_pos=None):
-    rep = FaultReport.clean()
+    rep = clean_report(ambient_mode())
     aux = jnp.zeros((), F32)
     new_caches = {} if caches is not None else None
     for i, kind in enumerate(pattern):
         name = f"b{i}_{kind}"
         c = caches.get(name) if caches is not None else None
         c = c if c else None  # {} -> None (stateless block)
-        x, r, nc, a = _apply_block(kind, blocks[name], x, cfg, abft,
-                                   positions, c, cache_pos)
-        rep = FaultReport.merge(rep, r)
+        with path_scope(name):
+            x, r, nc, a = _apply_block(kind, blocks[name], x, cfg, abft,
+                                       positions, c, cache_pos)
+        rep = merge_verdicts(rep, r)
         aux = aux + a
         if caches is not None:
             new_caches[name] = nc if nc is not None else {}
     return x, rep, new_caches, aux
 
 
+# -- scanned-stage plan plumbing -------------------------------------------
+
+def _stage_wck_xs() -> Dict[str, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Offline checksums of the scanned stages, keyed by entry path, with
+    their leading repeats axis intact - threaded through the scan's xs so
+    each repeat slice reaches its op without a per-call encode."""
+    plan = ambient_plan()
+    if plan is None:
+        return {}
+    out = {}
+    for name, e in plan.entries.items():
+        if name.startswith("stages/") and e.stack and e.wck is not None:
+            out[name] = (e.wck.cw1, e.wck.cw2)
+    return out
+
+
+def _stage_overrides(wcks: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]]):
+    """entry_overrides mapping for one scan step: the stacked stage entry
+    swapped for a per-repeat view carrying that repeat's checksum slice."""
+    plan = ambient_plan()
+    if plan is None or not wcks:
+        return entry_overrides({})
+    ov = {}
+    for name, (cw1, cw2) in wcks.items():
+        e = plan.entries[name]
+        ov[name] = dataclasses.replace(
+            e, wck=WeightChecksums(cw1, cw2, e.wck.col_chunk),
+            w_shape=None if e.w_shape is None else e.w_shape[e.stack:],
+            stack=0)
+    return entry_overrides(ov)
+
+
 def _forward(params, tokens, cfg, *, caches=None, cache_pos=None,
              positions=None, remat=False):
-    """Shared trunk. tokens: (B, S[, K]). Returns (logits, report, aux,
-    new_caches)."""
+    """Shared trunk. tokens: (B, S[, K]). Returns (logits, sectioned
+    ModelReport, aux, new_caches). Report keys: "prefix" / "stages" (one
+    scalar carry merged through the scan) / "rem", plus the LM head under
+    its exact plan path ("embed/head" or "embed/table") so the deferred
+    corrective rerun can trust the head's carried detect flag."""
     abft = abft_config(cfg)
+    mode = ambient_mode()
     pattern, reps, rem = cfg.stages()
     b, s = tokens.shape[:2]
     x = embed(params["embed"], tokens, cfg)
@@ -183,39 +240,47 @@ def _forward(params, tokens, cfg, *, caches=None, cache_pos=None,
     if positions is None:
         positions = jnp.arange(s, dtype=jnp.int32)[None, :]     # (1, S)
 
-    rep = FaultReport.clean()
+    sections: Dict[str, Any] = {}
     aux = jnp.zeros((), F32)
     new_caches: Dict[str, Any] = {}
 
     if cfg.prefix_pattern:
         pc = caches.get("prefix") if caches is not None else None
-        x, r, nc, a = _apply_blocks(cfg.prefix_pattern, params["prefix"], x,
-                                    cfg, abft, positions, pc, cache_pos)
-        rep, aux = FaultReport.merge(rep, r), aux + a
+        with path_scope("prefix"):
+            x, r, nc, a = _apply_blocks(cfg.prefix_pattern,
+                                        params["prefix"], x,
+                                        cfg, abft, positions, pc, cache_pos)
+        sections["prefix"], aux = r, aux + a
         if caches is not None:
             new_caches["prefix"] = nc
 
     if reps:
+        stage_wck = _stage_wck_xs()
         if not cfg.scan_stages:
             # unrolled (dry-run costing): python loop over stage index
-            def stage_once(sp, x):
-                x, r, _, a = _apply_blocks(pattern, sp, x, cfg, abft,
-                                           positions, None, None)
+            def stage_once(sp, x, wcks):
+                with path_scope("stages"), _stage_overrides(wcks):
+                    x, r, _, a = _apply_blocks(pattern, sp, x, cfg, abft,
+                                               positions, None, None)
                 return x, r, a
 
             if remat:
                 stage_once = jax.checkpoint(stage_once)
+            srep = clean_report(mode)
             ncs_list = []
             for r_i in range(reps):
                 sp = jax.tree.map(lambda t: t[r_i], params["stages"])
+                wcks = jax.tree.map(lambda t: t[r_i], stage_wck)
                 if caches is None:
-                    x, r, a = stage_once(sp, x)
+                    x, r, a = stage_once(sp, x, wcks)
                     nc = None
                 else:
                     sc = jax.tree.map(lambda t: t[r_i], caches["stages"])
-                    x, r, nc, a = _apply_blocks(pattern, sp, x, cfg, abft,
-                                                positions, sc, cache_pos)
-                rep, aux = FaultReport.merge(rep, r), aux + a
+                    with path_scope("stages"), _stage_overrides(wcks):
+                        x, r, nc, a = _apply_blocks(pattern, sp, x, cfg,
+                                                    abft, positions, sc,
+                                                    cache_pos)
+                srep, aux = merge_verdicts(srep, r), aux + a
                 if caches is not None:
                     ncs_list.append(nc)
             if caches is not None:
@@ -224,46 +289,58 @@ def _forward(params, tokens, cfg, *, caches=None, cache_pos=None,
         elif caches is not None:
             def stage_fn(carry, xs):
                 x, rep, aux = carry
-                sp, sc = xs
-                x, r, nc, a = _apply_blocks(pattern, sp, x, cfg, abft,
-                                            positions, sc, cache_pos)
-                return (x, FaultReport.merge(rep, r), aux + a), nc
+                sp, sc, wcks = xs
+                with path_scope("stages"), _stage_overrides(wcks):
+                    x, r, nc, a = _apply_blocks(pattern, sp, x, cfg, abft,
+                                                positions, sc, cache_pos)
+                return (x, merge_verdicts(rep, r), aux + a), nc
 
-            (x, rep, aux), ncs = jax.lax.scan(
-                stage_fn, (x, rep, aux), (params["stages"], caches["stages"]))
+            (x, srep, aux), ncs = jax.lax.scan(
+                stage_fn, (x, clean_report(mode), aux),
+                (params["stages"], caches["stages"], stage_wck))
             new_caches["stages"] = ncs
         else:
-            def stage_fn_nc(carry, sp):
+            def stage_fn_nc(carry, xs):
                 x, rep, aux = carry
-                x, r, _, a = _apply_blocks(pattern, sp, x, cfg, abft,
-                                           positions, None, None)
-                return (x, FaultReport.merge(rep, r), aux + a), None
+                sp, wcks = xs
+                with path_scope("stages"), _stage_overrides(wcks):
+                    x, r, _, a = _apply_blocks(pattern, sp, x, cfg, abft,
+                                               positions, None, None)
+                return (x, merge_verdicts(rep, r), aux + a), None
 
             if remat:
                 stage_fn_nc = jax.checkpoint(stage_fn_nc)
-            (x, rep, aux), _ = jax.lax.scan(stage_fn_nc, (x, rep, aux),
-                                            params["stages"])
+            (x, srep, aux), _ = jax.lax.scan(
+                stage_fn_nc, (x, clean_report(mode), aux),
+                (params["stages"], stage_wck))
+        sections["stages"] = srep
 
     if rem:
         rc = caches.get("rem") if caches is not None else None
-        x, r, nc, a = _apply_blocks(rem, params["rem"], x, cfg, abft,
-                                    positions, rc, cache_pos)
-        rep, aux = FaultReport.merge(rep, r), aux + a
+        with path_scope("rem"):
+            x, r, nc, a = _apply_blocks(rem, params["rem"], x, cfg, abft,
+                                        positions, rc, cache_pos)
+        sections["rem"], aux = r, aux + a
         if caches is not None:
             new_caches["rem"] = nc
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits, r = logits_head(params["embed"], x, cfg, abft)
-    rep = FaultReport.merge(rep, r)
+    head_key = "embed/table" if cfg.tie_embeddings else "embed/head"
+    sections[head_key] = as_fault_report(r)
     if cfg.logit_softcap:
         logits = softcap(logits, cfg.logit_softcap)
+    rep = ModelReport(sections)
     return logits, rep, aux, (new_caches if caches is not None else None)
 
 
 def forward_train(params, tokens, cfg):
-    """tokens: (B, S[, K]) -> logits (B, S, [K,] V), report, aux."""
+    """tokens: (B, S[, K]) -> logits (B, S, [K,] V), report, aux.
+    The report keeps the scalar FaultReport contract (step runners and
+    the microbatch scan carry merge it); use `train_apply` +
+    core.ProtectedModel for the sectioned / deferred workflow."""
     logits, rep, aux, _ = _forward(params, tokens, cfg, remat=cfg.remat)
-    return logits, rep, aux
+    return logits, as_fault_report(rep), aux
 
 
 def prefill(params, tokens, cfg, max_len: int):
@@ -273,7 +350,7 @@ def prefill(params, tokens, cfg, max_len: int):
     caches = init_caches(cfg, b, max_len)
     logits, rep, _, caches = _forward(params, tokens, cfg, caches=caches,
                                       cache_pos=jnp.zeros((), jnp.int32))
-    return logits[:, -1:], rep, caches
+    return logits[:, -1:], as_fault_report(rep), caches
 
 
 def decode_step(params, tokens, caches, position, cfg):
@@ -283,7 +360,53 @@ def decode_step(params, tokens, caches, position, cfg):
     logits, rep, _, caches = _forward(
         params, tokens, cfg, caches=caches, cache_pos=position,
         positions=position[None, None])
-    return logits, rep, caches
+    return logits, as_fault_report(rep), caches
+
+
+# --------------------------------------------------------------------------
+# ProtectedModel apply_fns (the model-agnostic protection surface)
+# --------------------------------------------------------------------------
+
+def train_apply(cfg):
+    """apply_fn for core.ProtectedModel: full-sequence forward.
+
+        pm = ProtectedModel(train_apply(cfg), plan)   # plan: build_plan
+        (logits, aux), report = pm(params, tokens)
+        (logits, aux), report = pm(params, tokens, correction="deferred")
+
+    The deferred mode runs the whole forward detect-only (DetectEvidence
+    through the stage scan carry) and executes ONE model-level lax.cond
+    that reruns it with full correction only when something flagged."""
+    def apply_fn(params, tokens):
+        logits, rep, aux, _ = _forward(params, tokens, cfg,
+                                       remat=cfg.remat)
+        return (logits, aux), rep
+    return apply_fn
+
+
+def prefill_apply(cfg, max_len: int):
+    """apply_fn for core.ProtectedModel: prefill (returns caches in the
+    output pytree, so the deferred cond reruns cache writes too)."""
+    def apply_fn(params, tokens):
+        b = tokens.shape[0]
+        caches = init_caches(cfg, b, max_len)
+        logits, rep, _, caches = _forward(
+            params, tokens, cfg, caches=caches,
+            cache_pos=jnp.zeros((), jnp.int32))
+        return (logits[:, -1:], caches), rep
+    return apply_fn
+
+
+def decode_apply(cfg):
+    """apply_fn for core.ProtectedModel: one synchronized decode step.
+    args: (params, tokens, caches, position)."""
+    def apply_fn(params, tokens, caches, position):
+        position = jnp.asarray(position, jnp.int32).reshape(())
+        logits, rep, _, caches = _forward(
+            params, tokens, cfg, caches=caches, cache_pos=position,
+            positions=position[None, None])
+        return (logits, caches), rep
+    return apply_fn
 
 
 # --------------------------------------------------------------------------

@@ -29,7 +29,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FaultReport, weight_checksums_matmul, weight_leaf
+from repro.core import (FaultReport, apply_w_view,
+                        stacked_weight_checksums_matmul,
+                        weight_checksums_matmul, weight_leaf)
 from repro.core import checksums as C
 
 log = logging.getLogger("repro.ft")
@@ -93,7 +95,7 @@ def audit_weights_against_plan(params, plan, rtol: float = 1e-5
     bad = []
     for name, e in plan.entries.items():
         try:
-            w = weight_leaf(params, name)
+            w = apply_w_view(weight_leaf(params, name), e.w_view)
         except KeyError:
             bad.append(f"{name}: missing from params")
             continue
@@ -111,7 +113,11 @@ def audit_weights_against_plan(params, plan, rtol: float = 1e-5
                            f"({got:.6g} vs plan {e.w_sum:.6g})")
             continue
         if e.op.kind == "matmul":
-            fresh = weight_checksums_matmul(w, e.wck.col_chunk)
+            # scanned-stage entries re-encode through the same stacked
+            # helper build_plan used, so the recipes cannot drift
+            fresh = (stacked_weight_checksums_matmul(w, e.wck.col_chunk)
+                     if e.stack
+                     else weight_checksums_matmul(w, e.wck.col_chunk))
             pairs = ((np.asarray(e.wck.cw1), np.asarray(fresh.cw1)),
                      (np.asarray(e.wck.cw2), np.asarray(fresh.cw2)))
         else:

@@ -281,6 +281,32 @@ def test_campaign_weight_corrupt_detected_not_corrected(engine):
         CampaignResult(cells=[cell, conv], meta={})) == []
 
 
+def test_campaign_transformer_gemm_arm(engine):
+    """The transformer-GEMM arm runs the op through the ambient
+    plan-context resolution (plan_scope + by-path entry lookup - the
+    route every ProtectedModel layer takes): the statistical gates must
+    hold on that path exactly as on the explicit-entry one, including the
+    stale-plan weight_corrupt regime and the deferred scheme."""
+    cell = engine.run_cell("transformer_gemm", "full", "burst_row",
+                           trials=128, seed=8)
+    assert cell.detection_rate == 1.0
+    assert cell.correction_rate >= 0.99
+    assert cell.residual_rate == 0.0
+    clean = engine.run_cell("transformer_gemm", "full", "none",
+                            trials=128, seed=9)
+    assert clean.false_positive_rate == 0.0
+    assert clean.correction_rate == 1.0
+    wc = engine.run_cell("transformer_gemm", "full", "weight_corrupt",
+                         trials=64, seed=10)
+    assert wc.detection_rate == 1.0
+    deferred = engine.run_cell("transformer_gemm", "deferred", "burst_row",
+                               trials=64, seed=8)
+    full = engine.run_cell("transformer_gemm", "full", "burst_row",
+                           trials=64, seed=8)
+    assert deferred.detection_rate == full.detection_rate
+    assert deferred.corrected_by == full.corrected_by
+
+
 def test_campaign_deferred_scheme_matches_full(engine):
     """The deferred per-op workflow (detect-only + ONE cond into
     correct_op) must reproduce the 'full' scheme's verdicts, corrected-by
