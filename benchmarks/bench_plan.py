@@ -35,7 +35,7 @@ from repro.core import (ProtectedModel, ProtectionPlan, build_plan,
 from repro.models import cnn
 from .common import row
 
-SCHEMA = "repro.bench_plan/v4"
+SCHEMA = "repro.bench_plan/v5"
 SCALE = 0.12
 IMG = 64
 BATCH = 8
@@ -242,14 +242,22 @@ def _transformer_cell():
     (2x16 tokens): small enough for CI, and its lax.scan stage means the
     deferred saving here is the scan-carried cond structure, not N
     per-layer conds - the cell exists to keep the transformer path's
-    error-free overhead on the same trajectory tracking as the CNNs."""
+    error-free overhead on the same trajectory tracking as the CNNs.
+
+    A second, informational duo prices the fused single-launch detect
+    path (force_fused_matmul: every stage GEMM + its threshold compare in
+    ONE Pallas launch) against the same plain forward. On CPU the kernels
+    run in interpret mode, so the fused column is expected to lose big
+    here - it exists to track the dispatch structure and to give TPU runs
+    a slot where the number becomes meaningful."""
     import repro.configs as C
+    from repro.core.plan import force_fused_matmul
     from repro.models import transformer as M
     cfg = C.reduced(C.get("smollm-360m"))
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
                                 cfg.vocab_size, jnp.int32)
-    plan = build_plan(params, cfg, batch=2)
+    plan = build_plan(params, cfg, batch=2, seq=16)
     pm = ProtectedModel(M.train_apply(cfg), plan)
     off = cfg.replace(abft=False)
     f_plain = jax.jit(lambda p, t: M.forward_train(p, t, off)[0])
@@ -262,6 +270,11 @@ def _transformer_cell():
     t_plain, t_pl, t_df = _interleaved(
         f_plain, f_perlayer, f_deferred, args=(params, tokens),
         rounds=60, iters=2)
+    pm_fused = ProtectedModel(M.train_apply(cfg), force_fused_matmul(plan))
+    f_fused = jax.jit(
+        lambda p, t: pm_fused(p, t, correction="deferred")[0][0])
+    t_plain2, t_fdf = _interleaved(f_plain, f_fused,
+                                   args=(params, tokens), rounds=10)
     return {
         "op": f"{cfg.name} reduced train-fwd batch=2 seq=16 (scan stages)",
         "plain_us": t_plain * 1e6,
@@ -276,6 +289,11 @@ def _transformer_cell():
         "overhead_deferred_pct": (t_df - t_plain) / t_plain * 100,
         "deferred_lt_per_layer": bool(t_df < t_pl),
         "deferred_gate_pass": bool(t_df <= DEFERRED_SLACK * t_pl),
+        # fused single-launch column (informational, never gated: the
+        # interpret-mode kernel dominates on CPU; meaningful on TPU)
+        "deferred_fused_us": t_fdf * 1e6,
+        "overhead_deferred_fused_pct": (t_fdf - t_plain2) / t_plain2 * 100,
+        "fused_interpret_mode": jax.default_backend() != "tpu",
     }
 
 
@@ -401,7 +419,8 @@ def run(models=MODELS, out_path: str | None = None):
     rows.append(row(
         "plan/transformer", transformer["reused_us"],
         f"plain_us={transformer['plain_us']:.0f};"
-        f"deferred_us={transformer['deferred_us']:.0f}"))
+        f"deferred_us={transformer['deferred_us']:.0f};"
+        f"deferred_fused_us={transformer['deferred_fused_us']:.0f}"))
 
     regression = _regression(results, baseline_path, trajectory=trajectory)
     # the deferred-correction gate: per model, deferred error-free

@@ -11,7 +11,8 @@ from .injection import (CONTROL_MODEL, FAULT_MODELS, FaultModel, FaultSpec,
 from .plan import (OpSite, OpSpec, PlanEntry, PlanStaleError, ProtectionPlan,
                    ProtectionSpec, apply_w_view, build_plan,
                    calibrate_tau_factor, conv_entry, correct_op,
-                   current_path, entry_overrides, grouped_matmul_entry,
+                   current_path, entry_overrides, force_fused_matmul,
+                   grouped_matmul_entry,
                    matmul_entry, ambient_mode, path_scope, plan_scope,
                    protect_op, protect_site, protection_spec, resolve_entry,
                    stacked_weight_checksums_matmul, weight_leaf)
@@ -32,7 +33,7 @@ __all__ = [
     "OpSite", "OpSpec", "PlanEntry", "PlanStaleError", "ProtectionPlan",
     "ProtectionSpec", "apply_w_view", "build_plan", "calibrate_tau_factor",
     "conv_entry", "correct_op", "current_path", "entry_overrides",
-    "grouped_matmul_entry", "matmul_entry", "ambient_mode", "path_scope",
+    "force_fused_matmul", "grouped_matmul_entry", "matmul_entry", "ambient_mode", "path_scope",
     "plan_scope", "protect_op", "protect_site", "protection_spec",
     "resolve_entry", "stacked_weight_checksums_matmul", "weight_leaf",
     "CHECKSUM_REFRESH", "CLC", "COC", "DEFAULT_CONFIG", "FC", "NONE", "RC",

@@ -637,38 +637,56 @@ def _attn_kind(kind: str) -> bool:
     return kind.startswith("attn")
 
 
-def _block_sites(prefix: str, kind: str, cfg, stack: int) -> List[OpSite]:
+def _block_sites(prefix: str, kind: str, cfg, stack: int,
+                 rows: int) -> List[OpSite]:
     """GEMM sites of one transformer block, keyed by the exact param-tree
-    paths models.transformer.init_params creates."""
+    paths models.transformer.init_params creates.
+
+    `rows` is the planned batch*seq row count: together with each site's
+    (k_dim, out_dim) it gives every plain-matmul site a real OpShape, so
+    build_plan's profile-guided calibration covers transformer GEMMs the
+    same way it covers convs. grouped_matmul sites stay shapeless (their
+    per-expert geometry is runtime routing-dependent)."""
     d, hd = cfg.d_model, cfg.head_dim
     mm = OpSpec("matmul")
 
-    def site(rel, k_dim, op=mm):
-        return OpSite(f"{prefix}/{rel}", op, k_dim, stack=stack)
+    def site(rel, k_dim, op=mm, m=0):
+        shape = OpShape(n=rows, m=m, ch=k_dim) \
+            if m and op.kind == "matmul" else None
+        return OpSite(f"{prefix}/{rel}", op, k_dim, shape=shape,
+                      stack=stack)
 
     if _attn_kind(kind):
-        return [site("attn/wq", d), site("attn/wk", d), site("attn/wv", d),
-                site("attn/wo", cfg.num_heads * hd)]
+        q, kv = cfg.num_heads * hd, cfg.num_kv_heads * hd
+        return [site("attn/wq", d, m=q), site("attn/wk", d, m=kv),
+                site("attn/wv", d, m=kv), site("attn/wo", q, m=d)]
     if kind == "ffn":
-        return [site("ffn/gate", d), site("ffn/up", d),
-                site("ffn/down", cfg.d_ff)]
+        return [site("ffn/gate", d, m=cfg.d_ff), site("ffn/up", d,
+                                                      m=cfg.d_ff),
+                site("ffn/down", cfg.d_ff, m=d)]
     if kind == "moe":
         ff = cfg.moe_d_ff or cfg.d_ff
         g = OpSpec("grouped_matmul")
-        sites = [site("moe/router", d), site("moe/gate", d, g),
-                 site("moe/up", d, g), site("moe/down", ff, g)]
+        sites = [site("moe/router", d, m=cfg.num_experts),
+                 site("moe/gate", d, g), site("moe/up", d, g),
+                 site("moe/down", ff, g)]
         if cfg.n_shared_experts:
-            sites += [site("moe/shared/gate", d), site("moe/shared/up", d),
-                      site("moe/shared/down", ff * cfg.n_shared_experts)]
+            sh = ff * cfg.n_shared_experts
+            sites += [site("moe/shared/gate", d, m=sh),
+                      site("moe/shared/up", d, m=sh),
+                      site("moe/shared/down", sh, m=d)]
         return sites
     if kind == "ssm":
         di = cfg.ssm_expand * d
-        return [site("ssm/in_proj", d), site("ssm/out_proj", di)]
+        n_st = cfg.ssm_state
+        heads = di // cfg.ssm_head_dim
+        return [site("ssm/in_proj", d, m=2 * di + 2 * n_st + heads),
+                site("ssm/out_proj", di, m=d)]
     if kind == "rec":
         w = cfg.lru_width or d
-        return [site("rec/in_x", d), site("rec/in_gate", d),
-                site("rec/gate_a", w), site("rec/gate_i", w),
-                site("rec/out", w)]
+        return [site("rec/in_x", d, m=w), site("rec/in_gate", d, m=w),
+                site("rec/gate_a", w, m=w), site("rec/gate_i", w, m=w),
+                site("rec/out", w, m=d)]
     raise ValueError(f"unknown block kind {kind!r}")
 
 
@@ -696,38 +714,51 @@ def _cnn_spec(arch_cfg, batch: int) -> ProtectionSpec:
     return ProtectionSpec(sites=sites, base=base, meta=meta)
 
 
-def _transformer_spec(cfg, batch: int) -> ProtectionSpec:
+DEFAULT_PLAN_SEQ = 128
+
+
+def _transformer_spec(cfg, batch: int, seq: int) -> ProtectionSpec:
     base = ProtectConfig(enabled=cfg.abft,
                          row_chunk=cfg.abft_row_chunk,
                          col_chunk=cfg.abft_col_chunk,
                          detect_only=cfg.abft_detect_only)
     pattern, reps, rem = cfg.stages()
+    rows = batch * max(seq, 1)
     sites: List[OpSite] = []
     for i, kind in enumerate(cfg.prefix_pattern):
-        sites += _block_sites(f"prefix/b{i}_{kind}", kind, cfg, stack=0)
+        sites += _block_sites(f"prefix/b{i}_{kind}", kind, cfg, stack=0,
+                              rows=rows)
     if reps:
         for i, kind in enumerate(pattern):
-            sites += _block_sites(f"stages/b{i}_{kind}", kind, cfg, stack=1)
+            sites += _block_sites(f"stages/b{i}_{kind}", kind, cfg,
+                                  stack=1, rows=rows)
     for i, kind in enumerate(rem):
-        sites += _block_sites(f"rem/b{i}_{kind}", kind, cfg, stack=0)
+        sites += _block_sites(f"rem/b{i}_{kind}", kind, cfg, stack=0,
+                              rows=rows)
+    head_m = cfg.vocab_size * max(cfg.num_codebooks, 1)
+    head_shape = OpShape(n=rows, m=head_m, ch=cfg.d_model)
     if cfg.tie_embeddings:
         sites.append(OpSite("embed/table", OpSpec("matmul"),
-                            k_dim=cfg.d_model, w_view="tied_head",
-                            optional=False))
+                            k_dim=cfg.d_model, shape=head_shape,
+                            w_view="tied_head", optional=False))
     else:
         sites.append(OpSite("embed/head", OpSpec("matmul"),
-                            k_dim=cfg.d_model, optional=False))
-    meta = {"arch": getattr(cfg, "name", "?"), "batch": batch,
+                            k_dim=cfg.d_model, shape=head_shape,
+                            optional=False))
+    meta = {"arch": getattr(cfg, "name", "?"), "batch": batch, "seq": seq,
             "family": getattr(cfg, "family", "?"),
             "stage_repeats": reps}
     return ProtectionSpec(sites=sites, base=base, meta=meta)
 
 
-def protection_spec(arch_cfg, batch: int = 8) -> ProtectionSpec:
+def protection_spec(arch_cfg, batch: int = 8,
+                    seq: int = DEFAULT_PLAN_SEQ) -> ProtectionSpec:
     """Derive the model-agnostic ProtectionSpec from an architecture
     config: a models.cnn.CNNConfig (`.convs` walk) or a transformer
     configs.base.ModelConfig (`.stages()` walk over the param tree's
-    stable block paths). The spec is what build_plan actually compiles -
+    stable block paths). `seq` is the planned sequence length for
+    transformer specs (rows = batch*seq feed the per-site OpShapes; CNN
+    specs ignore it). The spec is what build_plan actually compiles -
     per arXiv:2104.09455, variant selection is a per-layer-shape decision
     independent of the model family."""
     if isinstance(arch_cfg, ProtectionSpec):
@@ -735,7 +766,7 @@ def protection_spec(arch_cfg, batch: int = 8) -> ProtectionSpec:
     if hasattr(arch_cfg, "convs"):
         return _cnn_spec(arch_cfg, batch)
     if hasattr(arch_cfg, "stages"):
-        return _transformer_spec(arch_cfg, batch)
+        return _transformer_spec(arch_cfg, batch, seq)
     raise TypeError(
         "protection_spec expects a CNNConfig (.convs), a transformer "
         f"ModelConfig (.stages) or a ProtectionSpec; got "
@@ -788,7 +819,8 @@ def _site_entry(site: OpSite, w, cfg: ProtectConfig) -> PlanEntry:
 
 
 def build_plan(params, arch_cfg, cost_model: Optional[CostModel] = None,
-               batch: int = 8, profile_kernels: bool = False,
+               batch: int = 8, seq: int = DEFAULT_PLAN_SEQ,
+               profile_kernels: bool = False,
                calibrate_tau: bool = True) -> ProtectionPlan:
     """Compile a model-level protection plan (the offline phase).
 
@@ -808,12 +840,19 @@ def build_plan(params, arch_cfg, cost_model: Optional[CostModel] = None,
     + fused jnp detection against the Pallas fused-epilogue route and pins
     the winner (`use_fused_kernel` + `kernel_tiles`) into the entry's
     config - the profile-guided step the arithmetic-intensity ABFT work
-    argues for. The timings land in `meta["kernel_profile"]`.
+    argues for. The timings land in `meta["kernel_profile"]`. Transformer
+    GEMM sites profile too (their OpShapes come from batch*`seq` rows);
+    when a matmul profile picks the fused kernel, the entry's chunking is
+    snapped to the kernel tiles so detect-only sites lower to the
+    single-launch fused detect path (chunk == tile). Profiling is
+    memoized per distinct (n, k, m) / conv shape, so the dozens of
+    identically-shaped per-block sites pay one timing each.
     """
-    spec = protection_spec(arch_cfg, batch=batch)
+    spec = protection_spec(arch_cfg, batch=batch, seq=seq)
     base = spec.base
     entries: Dict[str, PlanEntry] = {}
     kprof: Dict[str, dict] = {}
+    prof_cache: Dict[tuple, object] = {}
     for site in spec.sites:
         w = None
         if params is not None:
@@ -834,12 +873,26 @@ def build_plan(params, arch_cfg, cost_model: Optional[CostModel] = None,
         if profile_kernels and cfg.enabled and site.shape is not None:
             s = site.shape
             if site.op.kind == "conv":
-                prof = profile_conv_detect_kernel((s.n, s.m, s.h, s.h))
+                ckey = ("conv", s.n, s.m, s.h)
+                prof = prof_cache.get(ckey)
+                if prof is None:
+                    prof = profile_conv_detect_kernel((s.n, s.m, s.h, s.h))
+                    prof_cache[ckey] = prof
             else:
                 m = w.shape[-1] if w is not None else s.m
-                prof = profile_matmul_kernel(s.n, s.ch, m)
+                ckey = ("mm", s.n, s.ch, m)
+                prof = prof_cache.get(ckey)
+                if prof is None:
+                    prof = profile_matmul_kernel(s.n, s.ch, m)
+                    prof_cache[ckey] = prof
             cfg = cfg.replace(use_fused_kernel=prof.use_fused,
                               kernel_tiles=prof.tiles)
+            if (prof.use_fused and prof.tiles
+                    and site.op.kind == "matmul"):
+                # snap chunking to the kernel tiles so detect-only
+                # lowers to the single-launch fused detect kernel
+                cfg = cfg.replace(row_chunk=prof.tiles[0],
+                                  col_chunk=prof.tiles[1])
             kprof[site.path] = prof.doc()
         entries[site.path] = _site_entry(site, w, cfg)
     model = cost_model or CostModel()
@@ -848,12 +901,30 @@ def build_plan(params, arch_cfg, cost_model: Optional[CostModel] = None,
     if profile_kernels:
         meta["kernel_profile"] = kprof
         if not kprof and entries:
-            # transformer OpSites carry no OpShape yet (ROADMAP open
-            # item), so there is nothing to profile - say so instead of
-            # letting the caller believe the calibration pass ran
+            # only shapeless sites (grouped/moe experts) in this spec -
+            # say so instead of letting the caller believe the
+            # calibration pass ran
             logging.getLogger("repro.plan").warning(
                 "build_plan(profile_kernels=True): no profilable sites "
-                "in this spec (kernel profiling currently covers "
-                "CNN-style sites with an OpShape); plan built without "
-                "kernel pinning")
+                "in this spec (every site lacks an OpShape); plan built "
+                "without kernel pinning")
     return ProtectionPlan(entries=entries, meta=meta)
+
+
+def force_fused_matmul(plan: ProtectionPlan,
+                       tiles: Optional[Tuple[int, int, int]] = None
+                       ) -> ProtectionPlan:
+    """Pin the fused Pallas kernel on every plain-matmul entry regardless
+    of what profiling measured - the benchmark hook for pricing the fused
+    transformer column on hosts where interpret-mode timings would never
+    pick it. The runtime launches the detect kernel with tiles equal to
+    the entry's (row_chunk, col_chunk), so chunk==tile holds by
+    construction; `tiles` only overrides the K tile / non-detect path."""
+    entries = {}
+    for path, e in plan.entries.items():
+        if e.op.kind == "matmul" and e.cfg.enabled:
+            cfg = e.cfg.replace(use_fused_kernel=True,
+                                kernel_tiles=tiles or e.cfg.kernel_tiles)
+            e = dataclasses.replace(e, cfg=cfg)
+        entries[path] = e
+    return ProtectionPlan(entries=entries, meta=dict(plan.meta))

@@ -126,31 +126,28 @@ def _time_call(fn, *args, iters: int = 3, warmup: int = 2) -> float:
 _MATMUL_TILE_CANDIDATES = ((256, 256, 256), (128, 128, 256), (512, 512, 256))
 
 
-def profile_matmul_kernel(n: int, k: int, m: int, dtype=None,
-                          interpret: Optional[bool] = None,
-                          candidates=_MATMUL_TILE_CANDIDATES,
-                          iters: int = 3) -> KernelProfile:
-    """Time plain XLA dot + detection sums vs the fused Pallas epilogue on
-    a (n,k)@(k,m) GEMM; returns the winner and its tile sizes. On
-    non-TPU backends the kernel runs in interpret mode, which this
-    measurement correctly prices (it will essentially never win there)."""
+def matmul_profile_programs(n: int, k: int, m: int, *,
+                            tiles: Tuple[int, int, int],
+                            interpret: bool = True):
+    """The two candidate programs profile_matmul_kernel times, both
+    finished to the SAME outputs (o, s5, s6, s7, sumsq):
+
+    * plain - XLA dot + the fused jnp detection-sums pass;
+    * fused - the Pallas epilogue kernel + the chunk_sums_from_partials
+      finishing reduction the real protected path runs on the partials.
+
+    Timing the fused side at `abft_matmul(...)[0]` (the old behaviour)
+    never paid that finishing reduction while the plain side was priced
+    end-to-end, so the profile could pin a kernel that loses in
+    production. Exposed at module level so the fairness regression test
+    can assert both programs end at identical results."""
     import jax
     import jax.numpy as jnp
 
-    from repro.core.types import default_kernel_interpret
     from repro.kernels import ops as kops
-    if interpret is None:
-        interpret = default_kernel_interpret()
-    dtype = dtype or jnp.float32
-    key = jax.random.PRNGKey(n * 131 + m)
-    d = jax.random.normal(key, (n, k), jnp.float32).astype(dtype)
-    w = jax.random.normal(jax.random.fold_in(key, 1), (k, m),
-                          jnp.float32).astype(dtype)
+    bm, bn, bk = tiles
 
     def plain(d, w):
-        # what the unfused protected path actually pays: the dot plus the
-        # detection-sums pass over O (the fused kernel folds that pass
-        # into its epilogue, so it must be priced on the plain side too)
         o = jnp.dot(d, w, preferred_element_type=jnp.float32)
         wn = jnp.arange(n, dtype=jnp.float32)
         wm = jnp.arange(m, dtype=jnp.float32)
@@ -159,15 +156,48 @@ def profile_matmul_kernel(n: int, k: int, m: int, dtype=None,
         s7 = jnp.dot(jnp.sum(o, axis=0), wm)
         return o, s5, s6, s7, jnp.sum(o * o)
 
-    f_plain = jax.jit(plain)
+    def fused(d, w):
+        o, parts = kops.abft_matmul(d, w, interpret=interpret,
+                                    bm=bm, bn=bn, bk=bk)
+        # one whole-output chunk finishes the partials to the same scalar
+        # sums the plain program computes
+        s5, s6, s7, sq = kops.chunk_sums_from_partials(parts, n, m, o=o)
+        return o, s5[0, 0], s6[0, 0], s7[0, 0], sq[0, 0]
+
+    return jax.jit(plain), jax.jit(fused)
+
+
+def profile_matmul_kernel(n: int, k: int, m: int, dtype=None,
+                          interpret: Optional[bool] = None,
+                          candidates=_MATMUL_TILE_CANDIDATES,
+                          iters: int = 3) -> KernelProfile:
+    """Time plain XLA dot + detection sums vs the fused Pallas epilogue on
+    a (n,k)@(k,m) GEMM; returns the winner and its tile sizes. Both sides
+    are priced end-to-end through finished detection sums
+    (matmul_profile_programs). On non-TPU backends the kernel runs in
+    interpret mode, which this measurement correctly prices (it will
+    essentially never win there)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.types import default_kernel_interpret
+    if interpret is None:
+        interpret = default_kernel_interpret()
+    dtype = dtype or jnp.float32
+    key = jax.random.PRNGKey(n * 131 + m)
+    d = jax.random.normal(key, (n, k), jnp.float32).astype(dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, m),
+                          jnp.float32).astype(dtype)
+
+    f_plain, _ = matmul_profile_programs(n, k, m, tiles=candidates[0],
+                                         interpret=interpret)
     t_plain = _time_call(f_plain, d, w, iters=iters)
     # interpret mode (non-TPU) never wins: one timing call prices it
     k_iters, k_warm = (1, 1) if interpret else (iters, 2)
     t_fused, best_tiles = float("inf"), None
     for tiles in candidates:
-        bm, bn, bk = tiles
-        f = jax.jit(lambda d, w, bm=bm, bn=bn, bk=bk: kops.abft_matmul(
-            d, w, interpret=interpret, bm=bm, bn=bn, bk=bk)[0])
+        _, f = matmul_profile_programs(n, k, m, tiles=tiles,
+                                       interpret=interpret)
         t = _time_call(f, d, w, iters=k_iters, warmup=k_warm)
         if t < t_fused:
             t_fused, best_tiles = t, tiles

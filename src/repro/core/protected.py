@@ -274,7 +274,9 @@ def protect_matmul_output(
     Pallas kernel, ...). `tamper_checksums` is a test hook that corrupts the
     checksum set after encoding (paper Fig. 3/5 scenarios).
     `precomputed_sums` threads the fused kernel's epilogue partials
-    (s5, s6, s7, sumsq per chunk) so detection costs no extra pass over O.
+    (s5, s6, s7, sumsq per chunk) so detection costs no extra pass over O;
+    they are sums of the RAW product (pre-bias) and are compared against
+    the unadjusted checksums (the bias adjustment cancels on both sides).
 
     `mode` selects the execution split of the deferred-correction story:
     None runs whatever `cfg` says (the per-layer default), "detect_only"
@@ -324,10 +326,16 @@ def protect_matmul_output(
         detected = jnp.asarray(detected).astype(jnp.bool_).reshape(())
     else:
         if precomputed_sums is not None:
+            # kernel partials are RAW-product sums (reduced before the
+            # bias add), so compare them against the unadjusted
+            # checksums: adding the analytic bias term to one side only
+            # would false-flag every bias-carrying fused site, and
+            # adding it to both sides cancels exactly
             s5, s6, s7, sumsq = precomputed_sums
+            c5a, c6a, c7a = cs.c5, cs.c6, cs.c7
         else:
             s5, s6, s7, sumsq = _chunk_sums(o, rb, cb)
-        c5a, c6a, c7a = _adjusted_scalars(cs)
+            c5a, c6a, c7a = _adjusted_scalars(cs)
 
         tau5 = TH.tau_scalar(sumsq, k, o.dtype, cfg.tau_factor, cs.absdot)
         flag, score = _detect_invariants(c5a, c6a, c7a, s5, s6, s7, tau5,
@@ -460,6 +468,32 @@ def protected_matmul(
         from repro.kernels import ops as kops
         rb = pick_chunk(d2.shape[0], cfg.row_chunk)
         cb = wck.col_chunk if wck is not None else pick_chunk(m, cfg.col_chunk)
+        if mode == "detect_only" and bias is None:
+            # the single-launch detect path: chunk granularity == kernel
+            # tile, the threshold compare runs inside the GEMM epilogue,
+            # and the launch returns (raw O, one flag/score per tile) -
+            # the only work outside the kernel is the O(K)-sized checksum
+            # encode and two scalar max-reduces over the (nb, mb) tile
+            # verdicts. Bias-carrying sites keep the partials route: the
+            # kernel accumulates the raw product, and comparing raw-vs-raw
+            # is only the same decision when no bias adjustment applies.
+            # (sumsq - and so tau - also excludes the bias energy here; at
+            # detection scale that undershoots the threshold by the bias'
+            # share of the output energy, a no-op for bias-free sites.)
+            wck_d = wck if wck is not None \
+                else weight_checksums_matmul(w, cb)
+            cd1, cd2 = _encode_d_chunked(d2, rb)
+            cs = _scalar_checksums(cd1, cd2, wck_d)
+            tau_a, tau_b = TH.tau_scalar_coeffs(k, d.dtype, cfg.tau_factor)
+            res = kops.abft_matmul_detect(
+                d2, w, cs.c5, cs.c6, cs.c7, cs.absdot, rb=rb, cb=cb,
+                bk=(cfg.kernel_tiles or (0, 0, 256))[2], tau_a=tau_a,
+                tau_b=tau_b, weighted=cfg.detect_weighted,
+                interpret=cfg.resolve_interpret())
+            if res is not None:
+                o, flag, score = res
+                return (o.reshape(*lead, m),
+                        T.DetectEvidence(jnp.max(flag), jnp.max(score)))
         # plan-pinned tiles when profiled, else shape-derived defaults that
         # divide the checksum chunks so partials recombine exactly; a
         # non-dividing pinned tile recombines from O instead (ops.py)

@@ -24,16 +24,29 @@ def out_eps(dtype) -> float:
     return float(jnp.finfo(dtype).eps) if jnp.issubdtype(dtype, jnp.floating) else _F32_EPS
 
 
+def tau_scalar_coeffs(k_dim: int, o_dtype, factor: float):
+    """(a, b) of tau_scalar's affine form
+
+        tau5 = a * sqrt(sumsq) + b * absdot + 1e-30
+
+    - static python floats, so the fused Pallas detect kernel can inline
+    the threshold compare into its epilogue while this module stays the
+    single definition of the noise model."""
+    eps = out_eps(o_dtype)
+    return (factor * (eps + _F32_EPS * (float(k_dim) ** 0.5)),
+            factor * _F32_EPS)
+
+
 def tau_scalar(sumsq, k_dim: int, o_dtype, factor: float, absdot=None):
     """Threshold for scalar invariants (s5/s6/s7 vs c5/c6/c7).
 
     sumsq may be any shape (per-chunk); returns the matching shape.
     """
-    eps = out_eps(o_dtype)
+    a, b = tau_scalar_coeffs(k_dim, o_dtype, factor)
     scale = jnp.sqrt(jnp.maximum(sumsq.astype(jnp.float32), 0.0))
-    tau = factor * (eps + _F32_EPS * (float(k_dim) ** 0.5)) * scale
+    tau = a * scale
     if absdot is not None:
-        tau = tau + factor * _F32_EPS * absdot
+        tau = tau + b * absdot
     # absolute floor so exactly-zero chunks never flag on denormal dust
     return tau + 1e-30
 

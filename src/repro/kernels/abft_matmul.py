@@ -40,6 +40,17 @@ except ImportError:  # pragma: no cover
 F32 = jnp.float32
 
 
+def _acc_scratch(bm: int, bn: int):
+    """fp32 accumulator scratch spec. pltpu.VMEM pins it to VMEM on TPU;
+    when the pallas.tpu import failed (non-TPU jaxlib builds), interpret
+    mode - the documented fallback for exactly that situation - must not
+    dereference the absent module, so it gets the backend-agnostic
+    MemoryRef instead."""
+    if pltpu is not None:
+        return pltpu.VMEM((bm, bn), F32)
+    return pl.MemoryRef((bm, bn), F32, pl.ANY)
+
+
 def _kernel(d_ref, w_ref, o_ref, colsum_ref, rowsum_ref, sumsq_ref,
             acc_ref, *, k_steps: int):
     k = pl.program_id(2)
@@ -106,8 +117,128 @@ def abft_matmul(d: jnp.ndarray, w: jnp.ndarray, *, bm: int = 256,
             jax.ShapeDtypeStruct((n, m // bn), F32),
             jax.ShapeDtypeStruct((n // bm, m // bn), F32),
         ],
-        scratch_shapes=[pltpu.VMEM((bm, bn), F32)],
+        scratch_shapes=[_acc_scratch(bm, bn)],
         interpret=interpret,
         **kwargs,
     )(d, w)
     return o, (colsum, rowsum, sumsq, bm, bn)
+
+
+# --------------------------------------------------------------------------
+# fused GEMM + in-epilogue threshold compare (single-launch detection)
+# --------------------------------------------------------------------------
+
+def _detect_kernel(d_ref, w_ref, c5_ref, c6_ref, c7_ref, absdot_ref,
+                   o_ref, flag_ref, score_ref, acc_ref, *, k_steps: int,
+                   tau_a: float, tau_b: float, weighted: bool):
+    """abft_matmul's epilogue extended with the CoC-D compare itself: the
+    per-tile scalar invariants (s5 and, when `weighted`, the locally
+    index-weighted s6/s7) are reduced from the VMEM accumulator and
+    compared against the checksum-side predictions while the tile is
+    still resident - one scalar flag (+ evidence score) per tile leaves
+    the kernel instead of the O(N+M)-sized summation partials.
+
+    tau inlines thresholds.tau_scalar's affine form (tau_scalar_coeffs):
+    tau5 = tau_a*sqrt(sumsq) + tau_b*absdot + 1e-30, with the weighted
+    invariants amplified by the tile extents (tau_weighted). NaN/Inf on
+    either side of a compare flags the tile (mismatch semantics)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(d_ref[...].astype(F32), w_ref[...].astype(F32),
+                            preferred_element_type=F32)
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        o_ref[...] = acc.astype(o_ref.dtype)
+        bm, bn = acc.shape
+        sumsq = jnp.sum(acc * acc)
+        tau5 = (tau_a * jnp.sqrt(jnp.maximum(sumsq, 0.0))
+                + tau_b * absdot_ref[0, 0] + 1e-30)
+        cs = [(c5_ref[0, 0], jnp.sum(acc), tau5)]
+        if weighted:
+            wn = jax.lax.broadcasted_iota(F32, acc.shape, 0)
+            wm = jax.lax.broadcasted_iota(F32, acc.shape, 1)
+            cs += [(c6_ref[0, 0], jnp.sum(acc * wn),
+                    tau5 * float(max(bm - 1, 1))),
+                   (c7_ref[0, 0], jnp.sum(acc * wm),
+                    tau5 * float(max(bn - 1, 1)))]
+        flag = jnp.zeros((), jnp.bool_)
+        score = jnp.zeros((), F32)
+        for c, s, t in cs:
+            bad = ~(jnp.isfinite(c) & jnp.isfinite(s))
+            flag |= bad | (jnp.abs(c - s) > t)
+            score = jnp.maximum(score,
+                                jnp.where(bad, jnp.inf, jnp.abs(c - s) / t))
+        flag_ref[0, 0] = flag.astype(jnp.int32)
+        score_ref[0, 0] = score
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bm", "bn", "bk", "tau_a", "tau_b", "weighted", "interpret",
+    "out_dtype"))
+def abft_matmul_detect(d: jnp.ndarray, w: jnp.ndarray, c5: jnp.ndarray,
+                       c6: jnp.ndarray, c7: jnp.ndarray,
+                       absdot: jnp.ndarray, *, bm: int, bn: int,
+                       bk: int = 256, tau_a: float, tau_b: float,
+                       weighted: bool = True, interpret: bool = True,
+                       out_dtype=None) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                                jnp.ndarray]:
+    """O = D @ W plus the in-epilogue CoC-D compare: ONE kernel launch
+    returning (O, flag (nb, mb) i32, score (nb, mb) f32).
+
+    Detection chunk granularity IS the kernel tile here (c5/c6/c7/absdot
+    are the per-(bm x bn)-chunk checksum predictions, locally
+    index-weighted), so the launch subsumes both the GEMM and the whole
+    detection pass - no summation partials leave the kernel and no
+    separate detection dispatch runs. tau_a/tau_b are the static affine
+    threshold coefficients (thresholds.tau_scalar_coeffs)."""
+    n, k = d.shape
+    k2, m = w.shape
+    assert k == k2, (d.shape, w.shape)
+    bk = min(bk, k)
+    assert n % bm == 0 and m % bn == 0 and k % bk == 0, (
+        f"abft_matmul_detect needs tile-aligned shapes, got {(n, k, m)} "
+        f"with tiles {(bm, bk, bn)}")
+    nb, mb = n // bm, m // bn
+    assert c5.shape == (nb, mb), (c5.shape, (nb, mb))
+    out_dtype = out_dtype or d.dtype
+    grid = (nb, mb, k // bk)
+
+    kernel = functools.partial(_detect_kernel, k_steps=grid[2],
+                               tau_a=tau_a, tau_b=tau_b, weighted=weighted)
+    kwargs = {}
+    if not interpret and pltpu is not None:  # pragma: no cover (TPU only)
+        params = getattr(pltpu, "CompilerParams", None) or getattr(
+            pltpu, "TPUCompilerParams")
+        kwargs["compiler_params"] = params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    chunk_spec = pl.BlockSpec((1, 1), lambda i, j, kk: (i, j))
+    o, flag, score = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            chunk_spec, chunk_spec, chunk_spec, chunk_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            chunk_spec, chunk_spec,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, m), out_dtype),
+            jax.ShapeDtypeStruct((nb, mb), jnp.int32),
+            jax.ShapeDtypeStruct((nb, mb), F32),
+        ],
+        scratch_shapes=[_acc_scratch(bm, bn)],
+        interpret=interpret,
+        **kwargs,
+    )(d, w, c5.astype(F32), c6.astype(F32), c7.astype(F32),
+      absdot.astype(F32))
+    return o, flag, score

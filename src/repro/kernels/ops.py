@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from . import ref as _ref
 from .abft_matmul import abft_matmul as _abft_matmul_kernel
+from .abft_matmul import abft_matmul_detect as _abft_matmul_detect_kernel
 from .checksum_reduce import checksum_reduce as _checksum_reduce_kernel
 
 F32 = jnp.float32
@@ -60,8 +61,13 @@ def abft_matmul(d: jnp.ndarray, w: jnp.ndarray, *, interpret: bool = True,
     m = w.shape[1]
     bm_, bn_, bk_ = _tile(n, bm), _tile(m, bn), _tile(k, bk)
     if min(bm_, bn_, bk_) >= 8:
-        return _abft_matmul_kernel(d, w, bm=bm_, bn=bn_, bk=bk_,
-                                   interpret=interpret, out_dtype=out_dtype)
+        o, (colsum, rowsum, sumsq, _, _) = _abft_matmul_kernel(
+            d, w, bm=bm_, bn=bn_, bk=bk_, interpret=interpret,
+            out_dtype=out_dtype)
+        # re-attach the tile sizes as python ints: the jitted kernel
+        # returns them as traced constants, which would break the static
+        # alignment checks in chunk_sums_from_partials under an outer jit
+        return o, (colsum, rowsum, sumsq, bm_, bn_)
     pm = bm_ if bm_ >= 8 else _tile_pad(n, bm)
     pn = bn_ if bn_ >= 8 else _tile_pad(m, bn)
     pk = bk_ if bk_ >= 8 else _tile_pad(k, bk)
@@ -78,6 +84,29 @@ def abft_matmul(d: jnp.ndarray, w: jnp.ndarray, *, interpret: bool = True,
     return o[:n, :m], (colsum[:, :m], rowsum[:n, :], sumsq, pm, pn)
 
 
+def abft_matmul_detect(d: jnp.ndarray, w: jnp.ndarray, c5, c6, c7, absdot,
+                       *, rb: int, cb: int, bk: int = 256, tau_a: float,
+                       tau_b: float, weighted: bool = True,
+                       interpret: bool = True, out_dtype=None):
+    """Single-launch fused GEMM + CoC-D compare: detection chunk == kernel
+    tile. Returns (o, flag (nb,mb) i32, score (nb,mb) f32) - or None when
+    the (rb, cb) chunking cannot be launched as kernel tiles (sub-minimum
+    tiles or a non-dividing K), signalling the caller to take the
+    partials route instead. c5/c6/c7/absdot are the per-chunk checksum
+    predictions ((n//rb, m//cb), locally index-weighted, WITHOUT bias
+    adjustments - the kernel accumulates the raw product)."""
+    n, k = d.shape
+    m = w.shape[1]
+    bk_ = _tile(k, bk)
+    if (min(rb, cb, bk_) < 8 or n % rb or m % cb
+            or c5.shape != (n // rb, m // cb)):
+        return None
+    return _abft_matmul_detect_kernel(
+        d, w, c5, c6, c7, absdot, bm=rb, bn=cb, bk=bk_, tau_a=tau_a,
+        tau_b=tau_b, weighted=weighted, interpret=interpret,
+        out_dtype=out_dtype)
+
+
 def checksum_reduce(o: jnp.ndarray, *, interpret: bool = True,
                     bm: int = 512, bn: int = 512) -> Tuple:
     """Single-pass summation partials of O[N,M]:
@@ -86,8 +115,9 @@ def checksum_reduce(o: jnp.ndarray, *, interpret: bool = True,
     n, m = o.shape
     bm_, bn_ = _tile(n, bm), _tile(m, bn)
     if min(bm_, bn_) >= 8:
-        return _checksum_reduce_kernel(o, bm=bm_, bn=bn_,
-                                       interpret=interpret)
+        colsum, rowsum, sumsq, wcolsum, _, _ = _checksum_reduce_kernel(
+            o, bm=bm_, bn=bn_, interpret=interpret)
+        return colsum, rowsum, sumsq, wcolsum, bm_, bn_
     pm = bm_ if bm_ >= 8 else _tile_pad(n, bm)
     pn = bn_ if bn_ >= 8 else _tile_pad(m, bn)
     if pm is None or pn is None:

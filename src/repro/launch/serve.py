@@ -35,6 +35,9 @@ def serve(arch: str, batch: int, prompt_len: int, gen: int, seed: int = 0):
     t0 = time.time()
     out = prefill_fn(params, {"tokens": prompts})
     caches = out["caches"]
+    # the prefill pass runs under the same protection plan as decode; its
+    # verdict covers the whole prompt and must land in the fault tally
+    prefill_report = jax.tree.map(np.asarray, out["report"])
     nxt = jnp.argmax(out["logits"], axis=-1).astype(jnp.int32)
     if cfg.num_codebooks and nxt.ndim == 2:
         nxt = nxt[..., None].repeat(cfg.num_codebooks, -1)
@@ -55,9 +58,11 @@ def serve(arch: str, batch: int, prompt_len: int, gen: int, seed: int = 0):
         generated.append(np.asarray(nxt))
     t_decode = time.time() - t0
     tokens_out = jnp.concatenate([jnp.asarray(g) for g in generated], axis=1)
-    detected = sum(int(r.detected) for r in reports)
+    prefill_detected = int(prefill_report.detected)
+    detected = prefill_detected + sum(int(r.detected) for r in reports)
     return tokens_out, {"prefill_s": t_prefill, "decode_s": t_decode,
                         "tok_per_s": batch * (gen - 1) / max(t_decode, 1e-9),
+                        "prefill_detected": prefill_detected,
                         "faults_detected": detected}
 
 

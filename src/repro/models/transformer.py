@@ -11,7 +11,11 @@ mode, where the lax.scan over stages carries a compact DetectEvidence
 instead of a FaultReport and ONE model-level cond reruns the corrective
 forward. Scanned-stage entries' offline checksums are threaded through
 the scan's xs (one slice per repeat), so serving pays no per-call weight
-encode.
+encode. When a plan pins `use_fused_kernel` on a GEMM site (profiled via
+build_plan(profile_kernels=True) or forced via force_fused_matmul), the
+scan's per-stage overrides preserve that config, so each detect-only
+stage GEMM lowers to ONE fused Pallas launch emitting (raw output,
+per-tile fault flag) - no standalone detection dispatch per site.
 """
 from __future__ import annotations
 

@@ -131,6 +131,91 @@ def test_matmul_errorfree_path_structure(detect_only):
     assert len(heavy) == 1, [str(e) for e in heavy]
 
 
+# --------------------------------------------------------------------------
+# single-launch fused detection (GEMM + threshold compare in one kernel)
+# --------------------------------------------------------------------------
+
+def _outer_eqns_no_pallas(jaxpr):
+    """_outer_eqns, but treating pallas_call bodies as opaque: the fused
+    detect kernel's inner jaxpr legitimately holds the GEMM dot and the
+    epilogue reductions, so recursing into it would count the very ops
+    whose absence OUTSIDE the kernel these assertions pin."""
+    eqns = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "cond":
+            continue
+        eqns.append(eqn)
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.params.values():
+            for sub in jax.tree_util.tree_leaves(
+                    v, is_leaf=lambda x: isinstance(
+                        x, (jax.core.Jaxpr, jax.core.ClosedJaxpr))):
+                if isinstance(sub, jax.core.ClosedJaxpr):
+                    eqns.extend(_outer_eqns_no_pallas(sub.jaxpr))
+                elif isinstance(sub, jax.core.Jaxpr):
+                    eqns.extend(_outer_eqns_no_pallas(sub))
+    return eqns
+
+
+def test_fused_detect_only_is_single_launch():
+    """With use_fused_kernel pinned, a detect-only matmul site lowers to
+    exactly ONE Pallas launch: the GEMM and the threshold compare run in
+    the same kernel, and the only contractions left outside are the
+    O(K)-sized checksum encodes - no standalone detection dot, no second
+    dispatch."""
+    d, w = _matmul_operands()
+    cfg = T.DEFAULT_CONFIG.replace(use_fused_kernel=True)
+    jaxpr = jax.make_jaxpr(
+        lambda d, w: protected_matmul(d, w, cfg=cfg,
+                                      mode="detect_only"))(d, w)
+    eqns = _outer_eqns_no_pallas(jaxpr.jaxpr)
+    launches = [e for e in eqns if e.primitive.name == "pallas_call"]
+    assert len(launches) == 1, [str(e.primitive) for e in eqns]
+    main_flops = N * K_MM * M_MM
+    for e in eqns:
+        if e.primitive.name == "dot_general":
+            assert _dot_flops(e) < main_flops / 2, str(e)
+
+
+def test_fused_detect_verdicts_match_unfused():
+    """The single-launch verdict agrees with the unfused detect path:
+    clean on clean weights, flagged on a post-encode corruption, same raw
+    output either way."""
+    from repro.core.protected import pick_chunk, weight_checksums_matmul
+    d, w = _matmul_operands()
+    cb = pick_chunk(M_MM, T.DEFAULT_CONFIG.col_chunk)
+    wck = weight_checksums_matmul(w, cb)
+    fused = T.DEFAULT_CONFIG.replace(use_fused_kernel=True)
+    for tamper in (0.0, 60.0):
+        wx = w.at[3, 5].add(tamper)
+        o_f, ev_f = protected_matmul(d, wx, wck=wck, cfg=fused,
+                                     mode="detect_only")
+        o_p, ev_p = protected_matmul(d, wx, wck=wck,
+                                     cfg=T.DEFAULT_CONFIG,
+                                     mode="detect_only")
+        assert isinstance(ev_f, T.DetectEvidence)
+        want = 1 if tamper else 0
+        assert int(ev_f.flag) == int(ev_p.flag) == want, tamper
+        np.testing.assert_allclose(np.asarray(o_f), np.asarray(o_p),
+                                   rtol=1e-6, atol=1e-5)
+
+
+def test_fused_detect_bias_site_keeps_partials_route():
+    """Bias-carrying sites must NOT take the raw-vs-raw single-launch
+    compare (the kernel accumulates the raw product; the checksum side
+    would need bias adjustment) - they keep the partials route and still
+    return a correct verdict."""
+    d, w = _matmul_operands()
+    b = jax.random.normal(jax.random.PRNGKey(7), (M_MM,), F32)
+    cfg = T.DEFAULT_CONFIG.replace(use_fused_kernel=True)
+    o, ev = protected_matmul(d, w, bias=b, cfg=cfg, mode="detect_only")
+    assert int(ev.flag) == 0
+    np.testing.assert_allclose(
+        np.asarray(o), np.asarray(jnp.dot(d, w) + b), rtol=1e-5,
+        atol=1e-4)
+
+
 def test_conv_correction_stays_in_cond():
     """The full config still traces the correction machinery - but only
     inside the cond: the whole program contains the c1-c4 convs, the

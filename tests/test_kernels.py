@@ -163,3 +163,86 @@ def test_conv_detect_sums_vs_jnp(oshape):
         scale = float(jnp.max(jnp.abs(jnp.atleast_1d(b)))) + 1.0
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=1e-4 * scale, err_msg=name)
+
+
+def _chunk_checksums_ref(d, w, rb, cb):
+    """Exact per-chunk c5/c6/c7/absdot of the raw product, straight from
+    the definition (locally index-weighted, fp32)."""
+    n, k = d.shape
+    m = w.shape[1]
+    o = jnp.dot(d.astype(jnp.float32), w.astype(jnp.float32))
+    nb, mb = n // rb, m // cb
+    oc = o.reshape(nb, rb, mb, cb)
+    c5 = oc.sum(axis=(1, 3))
+    c6 = jnp.einsum("arbc,r->ab", oc, jnp.arange(rb, dtype=jnp.float32))
+    c7 = jnp.einsum("arbc,c->ab", oc, jnp.arange(cb, dtype=jnp.float32))
+    ad = jnp.dot(jnp.abs(d.astype(jnp.float32)),
+                 jnp.abs(w.astype(jnp.float32)))
+    absdot = ad.reshape(nb, rb, mb, cb).sum(axis=(1, 3))
+    return c5, c6, c7, absdot
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_abft_matmul_detect_clean_and_tampered(dtype):
+    """The single-launch detect kernel: exact checksums -> every tile
+    flag clear and output matches the dot; a corrupted checksum -> the
+    owning tile (and only it) flags with score > 1."""
+    from repro.core import thresholds as TH
+    n, k, m = 32, 64, 96
+    rb, cb = 16, 48
+    key = jax.random.PRNGKey(5)
+    d = jax.random.normal(key, (n, k), jnp.float32).astype(dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, m),
+                          jnp.float32).astype(dtype)
+    c5, c6, c7, absdot = _chunk_checksums_ref(d, w, rb, cb)
+    tau_a, tau_b = TH.tau_scalar_coeffs(k, dtype, 64.0)
+    o, flag, score = ops.abft_matmul_detect(
+        d, w, c5, c6, c7, absdot, rb=rb, cb=cb, tau_a=tau_a, tau_b=tau_b,
+        interpret=True)
+    assert flag.shape == (n // rb, m // cb)
+    assert int(flag.sum()) == 0, np.asarray(score)
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32),
+        np.asarray(jnp.dot(d.astype(jnp.float32), w.astype(jnp.float32)),
+                   np.float32).astype(np.asarray(o).dtype),
+        rtol=1e-2 if dtype == jnp.bfloat16 else 1e-5, atol=1e-2)
+    _, flag2, score2 = ops.abft_matmul_detect(
+        d, w, c5.at[1, 0].add(5e3), c6, c7, absdot, rb=rb, cb=cb,
+        tau_a=tau_a, tau_b=tau_b, interpret=True)
+    assert int(flag2[1, 0]) == 1 and float(score2[1, 0]) > 1.0
+    assert int(flag2.sum()) == 1
+
+
+def test_abft_matmul_detect_refuses_misaligned_chunks():
+    """Chunkings the kernel cannot launch as tiles signal the partials
+    route with None instead of computing something wrong."""
+    d = jnp.ones((32, 64))
+    w = jnp.ones((64, 96))
+    z = jnp.zeros((8, 2))
+    # rb=4 is below the minimum tile
+    assert ops.abft_matmul_detect(d, w, z, z, z, z, rb=4, cb=48,
+                                  tau_a=1.0, tau_b=1.0) is None
+    # checksum grid does not match the (rb, cb) chunking
+    assert ops.abft_matmul_detect(d, w, z, z, z, z, rb=16, cb=48,
+                                  tau_a=1.0, tau_b=1.0) is None
+
+
+def test_kernels_survive_absent_pltpu(monkeypatch):
+    """Interpret mode is the documented fallback for jaxlib builds where
+    the pallas.tpu import fails - so it must not dereference the absent
+    module (the VMEM scratch spec used to)."""
+    from repro.kernels import abft_matmul as K
+    monkeypatch.setattr(K, "pltpu", None)
+    key = jax.random.PRNGKey(9)
+    d = jax.random.normal(key, (16, 32))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (32, 16))
+    o, _ = ops.abft_matmul(d, w, interpret=True, bm=8, bn=8, bk=8)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(jnp.dot(d, w)),
+                               rtol=1e-5, atol=1e-4)
+    c5, c6, c7, absdot = _chunk_checksums_ref(d, w, 8, 8)
+    o2, flag, _ = ops.abft_matmul_detect(
+        d, w, c5, c6, c7, absdot, rb=8, cb=8, tau_a=1e-5, tau_b=1e-7,
+        interpret=True)
+    assert int(flag.sum()) == 0
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(jnp.dot(d, w)),
+                               rtol=1e-5, atol=1e-4)

@@ -297,3 +297,98 @@ def test_resnet18_residuals_are_shape_valid():
     x = jnp.zeros((1, 3, 32, 32))
     logits, rep = cnn.forward_cnn(params, x, cfg)
     assert logits.shape == (1, cfg.num_classes)
+
+
+# --------------------------------------------------------------------------
+# profile-guided kernel selection (transformer sites + fairness)
+# --------------------------------------------------------------------------
+
+def test_transformer_spec_sites_carry_opshapes():
+    """Every plain-matmul transformer site gets a real OpShape (rows =
+    batch*seq), so profile_kernels has something to measure; grouped MoE
+    expert GEMMs stay shapeless (vmapped - no single kernel launch to
+    profile)."""
+    import repro.configs as C
+    from repro.core.plan import protection_spec
+    cfg = C.reduced(C.get("smollm-360m"))
+    spec = protection_spec(cfg, batch=2, seq=16)
+    mm = [s for s in spec.sites if s.op.kind == "matmul"]
+    assert mm and all(s.shape is not None for s in mm)
+    assert all(s.shape.n == 32 for s in mm)
+    wq = next(s for s in spec.sites if s.path.endswith("attn/wq"))
+    assert wq.shape.ch == cfg.d_model
+    assert wq.shape.m == cfg.num_heads * cfg.head_dim
+    head = next(s for s in spec.sites if s.path.startswith("embed/"))
+    assert head.shape is not None and head.shape.m >= cfg.vocab_size
+
+
+def test_build_plan_profiles_transformer_gemms():
+    """build_plan(profile_kernels=True) on a transformer config records a
+    kernel profile for every GEMM site (stages included) and pins a
+    coherent config: fused entries get kernel tiles with chunking snapped
+    to them; unfused entries carry no tiles."""
+    import repro.configs as C
+    from repro.models import transformer as M
+    cfg = C.reduced(C.get("smollm-360m"))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    plan = core.build_plan(params, cfg, batch=2, seq=16,
+                           profile_kernels=True)
+    kp = plan.meta["kernel_profile"]
+    assert any(p.startswith("stages/") for p in kp)
+    assert "embed/head" in kp or "embed/table" in kp
+    for path, doc in kp.items():
+        e = plan.entries[path]
+        assert e.cfg.use_fused_kernel == doc["use_fused"]
+        if doc["use_fused"]:
+            assert e.cfg.kernel_tiles is not None
+            assert e.cfg.row_chunk == e.cfg.kernel_tiles[0]
+            assert e.cfg.col_chunk == e.cfg.kernel_tiles[1]
+
+
+def test_force_fused_matmul_pins_and_runs():
+    """force_fused_matmul flips every enabled plain-matmul entry to the
+    fused kernel; the protected forward still matches the unprotected one
+    (detection only, no arithmetic change beyond kernel reassociation)."""
+    import repro.configs as C
+    from repro.core.plan import force_fused_matmul
+    from repro.models import transformer as M
+    cfg = C.reduced(C.get("smollm-360m"))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size, jnp.int32)
+    plan = force_fused_matmul(core.build_plan(params, cfg, batch=2,
+                                              seq=16))
+    assert all(e.cfg.use_fused_kernel for e in plan.entries.values()
+               if e.op.kind == "matmul" and e.cfg.enabled)
+    pm = core.ProtectedModel(M.train_apply(cfg), plan)
+    off = cfg.replace(abft=False)
+    ref = M.forward_train(params, tokens, off)[0]
+    (lo, _), rep = jax.jit(lambda p, t: pm(p, t,
+                                           correction="deferred"))(params,
+                                                                   tokens)
+    assert int(rep.detected) == 0
+    np.testing.assert_allclose(np.asarray(lo, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=1e-3, atol=1e-2)
+
+
+def test_matmul_profile_fairness_same_outputs():
+    """Regression for the profiling bias: both timed programs must finish
+    at the SAME five outputs (o, s5, s6, s7, sumsq) - the fused side used
+    to stop at the kernel launch, never paying the partials-finishing
+    reduction the production path runs."""
+    from repro.core.policy import matmul_profile_programs
+    n, k, m = 32, 64, 96
+    f_plain, f_fused = matmul_profile_programs(n, k, m, tiles=(16, 16, 32),
+                                               interpret=True)
+    key = jax.random.PRNGKey(11)
+    d = jax.random.normal(key, (n, k))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, m))
+    outs_p = f_plain(d, w)
+    outs_f = f_fused(d, w)
+    assert len(outs_p) == len(outs_f) == 5
+    for a, b, name in zip(outs_p, outs_f,
+                          ["o", "s5", "s6", "s7", "sumsq"]):
+        scale = float(jnp.max(jnp.abs(a))) + 1.0
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4 * scale, err_msg=name)

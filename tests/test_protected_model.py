@@ -334,3 +334,54 @@ def test_merge_verdicts_rejects_mixed_kinds():
     assert isinstance(core.clean_report("detect_only"),
                       core.DetectEvidence)
     assert isinstance(core.clean_report(None), core.FaultReport)
+
+
+def test_fused_pinned_scan_body_one_launch_per_gemm():
+    """With force_fused_matmul pinned, the detect-only scan body launches
+    exactly ONE Pallas kernel per protected stage GEMM (attn wq/wk/wv/wo
+    + ffn gate/up/down = 7) and keeps no standalone detection dot: every
+    dot_general left outside the kernels (attention scores, rope, the
+    O(K) checksum encodes) is small next to the protected GEMMs."""
+    from repro.core.plan import force_fused_matmul
+    cfg = _tiny_cfg(name="tiny_fused")
+    params = M.init_params(jax.random.PRNGKey(4), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (2, 8), 0,
+                                cfg.vocab_size, jnp.int32)
+    plan = force_fused_matmul(core.build_plan(params, cfg, batch=2, seq=8))
+    with core.plan_scope(plan, mode="detect_only"):
+        jaxpr = jax.make_jaxpr(
+            lambda p, t: M.train_apply(cfg)(p, t)[0][0])(params, tokens)
+
+    def eqns_no_pallas(jx):
+        out = []
+        for eqn in jx.eqns:
+            out.append(eqn)
+            if eqn.primitive.name == "pallas_call":
+                continue
+            for v in eqn.params.values():
+                for sub in jax.tree_util.tree_leaves(
+                        v, is_leaf=lambda x: isinstance(
+                            x, (jax.core.Jaxpr, jax.core.ClosedJaxpr))):
+                    if isinstance(sub, jax.core.ClosedJaxpr):
+                        out.extend(eqns_no_pallas(sub.jaxpr))
+                    elif isinstance(sub, jax.core.Jaxpr):
+                        out.extend(eqns_no_pallas(sub))
+        return out
+
+    scans = [e for e in jaxpr.jaxpr.eqns if e.primitive.name == "scan"]
+    assert len(scans) == 1
+    body = eqns_no_pallas(scans[0].params["jaxpr"].jaxpr)
+    launches = [e for e in body if e.primitive.name == "pallas_call"]
+    assert len(launches) == 7, len(launches)
+    # rows=16, smallest protected GEMM K=64, M=32
+    min_gemm_flops = 16 * 64 * 32
+    for e in body:
+        if e.primitive.name == "dot_general":
+            dims = e.params["dimension_numbers"][0][0]
+            k = 1
+            for ax in dims:
+                k *= e.invars[0].aval.shape[ax]
+            out_sz = 1
+            for s in e.outvars[0].aval.shape:
+                out_sz *= s
+            assert out_sz * k < min_gemm_flops / 2, str(e)

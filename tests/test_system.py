@@ -76,3 +76,39 @@ def test_serve_driver_end_to_end():
     toks, stats = serve("smollm-360m-smoke", batch=2, prompt_len=8, gen=4)
     assert toks.shape[0] == 2 and toks.shape[1] == 4
     assert stats["faults_detected"] == 0
+
+
+def test_serve_counts_prefill_verdict(monkeypatch):
+    """Regression: serve() used to drop the prefill step's fault report
+    on the floor - a fault caught while processing the whole prompt never
+    reached faults_detected. Fake steps make the prefill verdict the only
+    signal."""
+    import repro.launch.serve as S
+    from repro.core import FaultReport
+
+    def fake_make_prefill_step(cfg, max_len):
+        def step(params, batch):
+            b = batch["tokens"].shape[0]
+            one = jnp.ones((), jnp.int32)
+            return {"logits": jnp.zeros((b, 1, cfg.vocab_size)),
+                    "report": FaultReport(one, jnp.zeros((), jnp.int32),
+                                          one),
+                    "caches": {"k": jnp.zeros((b, 1))}}
+        return step
+
+    def fake_make_serve_step(cfg):
+        def step(params, batch):
+            b = batch["tokens"].shape[0]
+            return {"next_tokens": jnp.zeros((b, 1), jnp.int32),
+                    "logits": jnp.zeros((b, 1, cfg.vocab_size)),
+                    "report": FaultReport.clean(),
+                    "caches": batch["caches"],
+                    "positions": batch["positions"] + 1}
+        return step
+
+    monkeypatch.setattr(S, "make_prefill_step", fake_make_prefill_step)
+    monkeypatch.setattr(S, "make_serve_step", fake_make_serve_step)
+    toks, stats = S.serve("smollm-360m-smoke", batch=2, prompt_len=4,
+                          gen=3)
+    assert stats["prefill_detected"] == 1
+    assert stats["faults_detected"] == 1
