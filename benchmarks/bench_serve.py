@@ -1,0 +1,161 @@
+"""Protected serving benchmark: continuous-batching throughput with the
+deferred ProtectedModel path + plan-trusted weight audits vs the same
+session with protection off entirely (``abft=False``, no plan).
+
+One mixed-prompt workload (more requests than slots, staggered lengths)
+runs through both sessions; each mode reports wall time, tok/s and
+ttft p50/p95 from the ServingStats report, and every request's token
+stream is checked bitwise against ``greedy_reference`` - the unbatched,
+unprotected forward - so the protected column's numbers are only
+credited when its outputs are exactly the clean ones. ``BENCH_serve.json``
+carries a gate CI asserts on: zero dropped requests and clean-traffic
+parity in BOTH modes (the protected-vs-unprotected overhead itself is
+informational - CPU smoke scales sit on the dispatch floor, not the
+paper's compute-bound regime).
+
+On a >=4-device host (CI sets XLA_FLAGS=--xla_force_host_platform_\
+device_count=4) both sessions run on a (2,2) (data, model) mesh, so the
+gate also covers ``ProtectionPlan.shard``'s checksum placement.
+
+    PYTHONPATH=src python -m benchmarks.run --only serve
+    REPRO_BENCH_SERVE_JSON=/tmp/s.json ... (override the artifact path)
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.core import build_plan
+from repro.models import transformer as M
+from repro.serving import ProtectedSession, greedy_reference
+from .common import row
+
+SCHEMA = "repro.bench_serve/v1"
+ARCH = "smollm-360m-smoke"
+SLOTS = 4
+MAX_LEN = 24
+GEN = 4
+PROMPT_LENS = (5, 8, 6, 11, 4, 9)
+AUDIT_EVERY = 4
+
+
+def _prompts(cfg, lens, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+            for n in lens]
+
+
+def _run_mode(params, cfg, plan, prompts, mesh, refs) -> dict:
+    sess = ProtectedSession(params, cfg, plan, slots=SLOTS,
+                            max_len=MAX_LEN, mesh=mesh,
+                            audit_every=AUDIT_EVERY if plan is not None
+                            else 0)
+    # cold pass compiles the decode program + every prefill bucket; the
+    # same workload then re-runs warm, and the throughput columns come
+    # from the warm-pass deltas (a cold wall_s is ~all XLA compile time)
+    rids1 = [sess.submit(p, max_new_tokens=GEN) for p in prompts]
+    rep1 = sess.run()
+    rids2 = [sess.submit(p, max_new_tokens=GEN) for p in prompts]
+    rep2 = sess.run()
+    parity = [sess.tokens_for(rid) == refs[i % len(refs)]
+              for i, rid in enumerate(rids1 + rids2)]
+    warm_wall = rep2["wall_s"] - rep1["wall_s"]
+    warm_toks = rep2["tokens_total"] - rep1["tokens_total"]
+    by_id = {r["id"]: r for r in rep2["requests"]}
+    warm_ttfts = sorted(by_id[r]["ttft_s"] for r in rids2
+                        if by_id[r]["ttft_s"] is not None)
+    return {
+        "correction": sess.correction,
+        "audited": plan is not None,
+        "cold_wall_s": rep1["wall_s"],
+        "wall_s": warm_wall,
+        "tok_per_s": warm_toks / warm_wall if warm_wall > 0 else None,
+        "ttft_p50_s": warm_ttfts[len(warm_ttfts) // 2]
+        if warm_ttfts else None,
+        "ttft_p95_s": warm_ttfts[-1] if warm_ttfts else None,
+        "completed": rep2["completed"],
+        "tokens_total": rep2["tokens_total"],
+        "dropped": rep2["counters"]["dropped"],
+        "faults_detected": rep2["counters"]["faults_detected"],
+        "weight_audits": rep2["counters"]["weight_audits"],
+        "clean_parity": all(parity),
+        "parity_per_request": parity,
+    }
+
+
+def run(out_path: str | None = None):
+    print("# serve: protected continuous batching (deferred + plan audit) "
+          "vs unprotected session")
+    out_path = out_path or os.environ.get("REPRO_BENCH_SERVE_JSON",
+                                          "BENCH_serve.json")
+    # untied head so the sharded plan has a genuinely partitioned
+    # checksum entry on the mesh path (scanned-stage stacks replicate by
+    # design - runtime/sharding.checksum_shardings)
+    cfg = C.get(ARCH).replace(tie_embeddings=False)
+    ucfg = cfg.replace(abft=False)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _prompts(cfg, PROMPT_LENS)
+
+    mesh = None
+    if jax.device_count() >= 4:
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+
+    # the parity oracle: unbatched, unprotected greedy continuation
+    refs = [greedy_reference(params, ucfg, p, GEN, MAX_LEN)
+            for p in prompts]
+
+    plan = build_plan(params, cfg, batch=SLOTS, seq=MAX_LEN)
+    protected = _run_mode(params, cfg, plan, prompts, mesh, refs)
+    unprotected = _run_mode(params, ucfg, None, prompts, mesh, refs)
+
+    over = None
+    if unprotected["tok_per_s"] and protected["tok_per_s"]:
+        over = (unprotected["tok_per_s"] / protected["tok_per_s"] - 1) * 100
+
+    gate = {
+        "dropped": protected["dropped"] + unprotected["dropped"],
+        "clean_parity": bool(protected["clean_parity"]
+                             and unprotected["clean_parity"]),
+        "false_positives": protected["faults_detected"],
+        "pass": bool(protected["dropped"] == 0
+                     and unprotected["dropped"] == 0
+                     and protected["clean_parity"]
+                     and unprotected["clean_parity"]
+                     and protected["faults_detected"] == 0),
+    }
+    doc = {
+        "schema": SCHEMA,
+        "meta": {"arch": ARCH, "slots": SLOTS, "max_len": MAX_LEN,
+                 "gen": GEN, "prompt_lens": list(PROMPT_LENS),
+                 "devices": jax.device_count(),
+                 "mesh": list(mesh.devices.shape) if mesh is not None
+                 else None,
+                 "jax_version": jax.__version__},
+        "protected": protected,
+        "unprotected": unprotected,
+        "throughput_overhead_pct": over,
+        "gate": gate,
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    print(f"# wrote {out_path} (gate pass={gate['pass']}; "
+          f"protected {protected['tok_per_s'] or 0:.1f} tok/s vs "
+          f"unprotected {unprotected['tok_per_s'] or 0:.1f} tok/s)")
+    return [
+        row("serve/protected", protected["wall_s"] * 1e6,
+            f"tok_per_s={protected['tok_per_s'] or 0:.1f};"
+            f"parity={int(protected['clean_parity'])};"
+            f"dropped={protected['dropped']}"),
+        row("serve/unprotected", unprotected["wall_s"] * 1e6,
+            f"tok_per_s={unprotected['tok_per_s'] or 0:.1f};"
+            f"parity={int(unprotected['clean_parity'])};"
+            f"dropped={unprotected['dropped']}"),
+    ]
+
+
+if __name__ == "__main__":
+    run()

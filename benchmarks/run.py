@@ -13,14 +13,14 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: schemes,error_free,erroneous,mm_abft,"
                          "transformer,kernels,parallel,roofline,campaign,"
-                         "plan")
+                         "plan,serve")
     ap.add_argument("--quick", action="store_true",
                     help="skip the slow erroneous/parallel/campaign suites")
     args = ap.parse_args()
 
     from . import (bench_campaign, bench_error_free, bench_erroneous,
                    bench_kernels, bench_mm_abft, bench_parallel, bench_plan,
-                   bench_schemes, bench_transformer, roofline)
+                   bench_schemes, bench_serve, bench_transformer, roofline)
 
     suites = {
         "schemes": bench_schemes.run,            # Fig. 6 / Table 4
@@ -28,6 +28,7 @@ def main() -> None:
         "erroneous": bench_erroneous.run,        # Fig. 10(b)(c) / Fig. 11
         "campaign": bench_campaign.run,          # SS6 / Table 7 rates
         "plan": bench_plan.run,                  # offline-encode reuse gap
+        "serve": bench_serve.run,                # protected serving parity
         "mm_abft": bench_mm_abft.run,            # Table 6
         "transformer": bench_transformer.run,    # beyond-paper LLM overhead
         "kernels": bench_kernels.run,            # fused epilogue accounting

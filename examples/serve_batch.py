@@ -1,5 +1,5 @@
-"""Batched serving example: prefill + synchronized decode with ABFT
-verdicts per step, on any assigned arch (reduced by default).
+"""Batched serving example: continuous-batching ProtectedSession with
+per-request fault/SLO reports, on any assigned arch (reduced by default).
 
     PYTHONPATH=src python examples/serve_batch.py --arch mamba2-1.3b-smoke
     PYTHONPATH=src python examples/serve_batch.py --arch yi-9b-smoke
@@ -20,10 +20,18 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     args = ap.parse_args()
     toks, stats = serve(args.arch, args.batch, args.prompt_len, args.gen)
+    rep = stats["report"]
     print(f"arch={args.arch} generated={tuple(toks.shape)}")
     print(f"prefill {stats['prefill_s']*1e3:.1f} ms; "
           f"decode {stats['tok_per_s']:.1f} tok/s; "
+          f"ttft p50/p95 {rep['ttft_p50_s']*1e3:.1f}/"
+          f"{rep['ttft_p95_s']*1e3:.1f} ms; "
           f"faults detected: {stats['faults_detected']}")
+    for r in rep["requests"]:
+        print(f"  req {r['id']} slot={r['slot']} "
+              f"prompt={r['prompt_len']} gen={r['tokens_generated']} "
+              f"finish={r['finish_reason']} det={r['faults_detected']} "
+              f"corr={r['corrections_applied']}")
 
 
 if __name__ == "__main__":

@@ -38,8 +38,9 @@ and scheme tests that depend on their exact corruption patterns.
 """
 from __future__ import annotations
 
+import contextlib
 import math
-from typing import Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -392,3 +393,44 @@ def inject_single_block(o: jnp.ndarray, key: jax.Array,
     j = jax.random.randint(jax.random.fold_in(key, 1), (), 0, m)
     upd = o[i, j] * scale + 1.0
     return o.at[i, j].set(upd.astype(o.dtype))
+
+
+# --------------------------------------------------------------------------
+# ambient site-fault hooks (serving drills)
+# --------------------------------------------------------------------------
+#
+# The campaign injects through protect_op(..., o=o_bad) on one isolated op;
+# a serving drill needs the fault to land inside a full jitted forward at
+# one named plan path, so end-to-end per-request attribution can be tested
+# (which request's logits carried the corruption, which slot's report
+# flagged). `fault_scope` registers a trace-time hook keyed by the exact
+# param-tree path; core.plan.protect_site consults it and routes the
+# corrupted output through the ordinary `o=` injection seam, so detection
+# and the correction ladder see exactly what the campaign's cells see.
+#
+# Like the plan context, hooks are trace-time state: enter the scope around
+# the jit call that should bake the fault into its program.
+
+_SITE_FAULTS: List[Tuple[str, Callable]] = []
+
+
+@contextlib.contextmanager
+def fault_scope(path: str, fn: Callable[[jnp.ndarray], jnp.ndarray]):
+    """Corrupt the raw output of the protected matmul site at `path`
+    (exact match against core.plan.current_path) with `fn(o) -> o_bad`.
+    `o` arrives in the call site's natural shape (e.g. (B, S, V) for the
+    LM head), so hooks can target one batch row / one sequence position -
+    and can no-op by shape (`o.shape[1] > 1` selects prefill only)."""
+    _SITE_FAULTS.append((path, fn))
+    try:
+        yield
+    finally:
+        _SITE_FAULTS.pop()
+
+
+def site_fault(path: str) -> Optional[Callable]:
+    """Innermost registered hook for `path`, or None."""
+    for p, fn in reversed(_SITE_FAULTS):
+        if p == path:
+            return fn
+    return None

@@ -421,6 +421,30 @@ def protect_site(name: str, inputs, *, entry: Optional[PlanEntry] = None,
     if op.kind == "grouped_matmul":
         # per-group gates would need a vector; grouped sites re-detect
         detected = None
+    if o is None and op.kind == "matmul":
+        # serving-drill seam: an ambient fault hook at this exact path
+        # (injection.fault_scope) corrupts the raw output and routes it
+        # through the ordinary `o=` injection path, so a jitted forward
+        # carries a campaign-identical fault at one named site
+        from .injection import site_fault
+        hook = site_fault(current_path(name))
+        if hook is not None:
+            d, w = inputs[0], inputs[1]
+            lead, k, m = d.shape[:-1], d.shape[-1], w.shape[-1]
+            d2 = d.reshape(-1, k)
+            # same spelling as protected_matmul's raw product, so rows the
+            # hook leaves alone stay bitwise identical to the clean path
+            o2 = jnp.dot(d2, w, preferred_element_type=jnp.float32
+                         ).astype(d.dtype)
+            if len(inputs) > 2:
+                o2 = (o2.astype(jnp.float32)
+                      + inputs[2].astype(jnp.float32)).astype(o2.dtype)
+            o2 = hook(o2.reshape(*lead, m))
+            out, rep = protect_op(op, (d2,) + tuple(inputs[1:]),
+                                  entry=entry, cfg=use_cfg,
+                                  o=o2.reshape(-1, m), mode=mode,
+                                  detected=detected)
+            return out.reshape(*lead, m), rep
     return protect_op(op, inputs, entry=entry, cfg=use_cfg, o=o, mode=mode,
                       detected=detected)
 
@@ -580,6 +604,34 @@ class ProtectionPlan:
                 w_asum=doc.get("w_asum"), stack=doc.get("stack", 0),
                 w_view=doc.get("w_view"))
         return cls(entries=entries, meta=raw.get("meta", {}))
+
+    # -- sharding ----------------------------------------------------------
+    def shard(self, mesh, cfg=None) -> "ProtectionPlan":
+        """Place every entry's weight checksums on `mesh` with the same
+        runtime/sharding.py rules as the weights they encode (the checksum
+        of a column-sharded weight is row-sharded, and vice versa), so a
+        protected forward under the mesh contracts checksums against
+        already-colocated weight shards. Returns a new plan; `self` is
+        untouched. `cfg` enables the head-divisibility guard for attention
+        projections (same rule as param_shardings)."""
+        from repro.runtime.sharding import checksum_shardings
+        shardings = checksum_shardings(self, mesh, cfg=cfg)
+        entries: Dict[str, PlanEntry] = {}
+        for name, e in self.entries.items():
+            if e.wck is not None and name in shardings:
+                s1, s2 = shardings[name]
+                if isinstance(e.wck, WeightChecksums):
+                    wck = WeightChecksums(jax.device_put(e.wck.cw1, s1),
+                                          jax.device_put(e.wck.cw2, s2),
+                                          e.wck.col_chunk)
+                else:
+                    cw1, cw2 = e.wck
+                    wck = (jax.device_put(cw1, s1), jax.device_put(cw2, s2))
+                e = dataclasses.replace(e, wck=wck)
+            entries[name] = e
+        meta = dict(self.meta)
+        meta["mesh"] = {str(k): int(v) for k, v in mesh.shape.items()}
+        return ProtectionPlan(entries=entries, meta=meta)
 
 
 # --------------------------------------------------------------------------

@@ -42,6 +42,24 @@ VERIFY_ROWCOL_SLACK = 64.0
 # helpers
 # --------------------------------------------------------------------------
 
+def _replicate_small(x: jnp.ndarray) -> jnp.ndarray:
+    """Pin a small checksum/summation tensor to a fully-replicated layout.
+
+    Under a device mesh, GSPMD's propagation through a stage scan and the
+    deferred-correction cond can assign these reductions a partial-sum
+    layout it then "involuntarily rematerializes" - double-counting one
+    side of the invariant (observed as c == 2*s on CPU SPMD, a guaranteed
+    false positive on clean traffic). The arrays are O(chunks * K);
+    replicating them costs one tiny collective and keeps both sides of
+    every comparison in a single layout. No-op when no mesh is in scope.
+    """
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*([None] * x.ndim)))
+    except Exception:
+        return x
+
+
 def pick_chunk(n: int, target: int) -> int:
     """Largest divisor of n that is <= target (n itself if n <= target)."""
     if n <= target:
@@ -202,14 +220,16 @@ def _scalar_checksums(cd1, cd2, wck: WeightChecksums) -> _ChunkedChecksums:
     FLOPs of an O(K)-sized op - far cheaper than three extra XLA calls on
     the detect-only hot path)."""
     nb, mb = cd1.shape[0], wck.cw1.shape[0]
+    cd1, cd2 = _replicate_small(cd1), _replicate_small(cd2)
+    cw1, cw2 = _replicate_small(wck.cw1), _replicate_small(wck.cw2)
     lhs = jnp.concatenate([cd1, cd2, jnp.abs(cd1)], axis=0)
-    rhs = jnp.concatenate([wck.cw1, wck.cw2, jnp.abs(wck.cw1)], axis=0)
-    out = lhs @ rhs.T
+    rhs = jnp.concatenate([cw1, cw2, jnp.abs(cw1)], axis=0)
+    out = _replicate_small(lhs @ rhs.T)
     c5 = out[:nb, :mb]
     c6 = out[nb:2 * nb, :mb]
     c7 = out[:nb, mb:2 * mb]
     absdot = out[2 * nb:, 2 * mb:]
-    return _ChunkedChecksums(cd1, cd2, wck.cw1, wck.cw2, c5, c6, c7, absdot)
+    return _ChunkedChecksums(cd1, cd2, cw1, cw2, c5, c6, c7, absdot)
 
 
 def _chunk_sums(o: jnp.ndarray, rb: int, cb: int):
@@ -230,8 +250,8 @@ def _chunk_sums(o: jnp.ndarray, rb: int, cb: int):
     enc = jnp.stack([jnp.ones((rb * cb,), F32),
                      jnp.repeat(jnp.arange(rb, dtype=F32), cb),
                      jnp.tile(jnp.arange(cb, dtype=F32), rb)])
-    s = x @ enc.T
-    sumsq = jnp.sum(x * x, axis=1)
+    s = _replicate_small(x @ enc.T)
+    sumsq = _replicate_small(jnp.sum(x * x, axis=1))
     return (s[:, 0].reshape(nb, mb), s[:, 1].reshape(nb, mb),
             s[:, 2].reshape(nb, mb), sumsq.reshape(nb, mb))
 

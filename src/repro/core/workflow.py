@@ -121,12 +121,16 @@ class ProtectedModel:
                         f"{type(rep).__name__}")
 
     def __call__(self, params, *args, correction: str = "per_layer",
-                 **kwargs):
+                 with_detect_out: bool = False, **kwargs):
         from .plan import plan_scope
         if correction not in ("per_layer", "deferred"):
             raise ValueError(f"ProtectedModel: unknown correction mode "
                              f"{correction!r} (have 'per_layer', "
                              "'deferred')")
+        if with_detect_out and correction != "deferred":
+            raise ValueError("ProtectedModel: with_detect_out requires "
+                             "correction='deferred' (there is no separate "
+                             "detect pass in per-layer mode)")
         if correction == "per_layer":
             with plan_scope(self.plan):
                 return self.apply_fn(params, *args, **kwargs)
@@ -147,7 +151,9 @@ class ProtectedModel:
                 "on the hot path")
         names = list(evmap)
         if not names:
-            return out_d, T.ModelReport({}, mode="deferred")
+            rep0 = T.ModelReport({}, mode="deferred")
+            return ((out_d, rep0, out_d) if with_detect_out
+                    else (out_d, rep0))
         flags = jnp.stack([evmap[n].flag for n in names])
 
         def _corrective():
@@ -174,7 +180,11 @@ class ProtectedModel:
         rep = T.ModelReport(
             {n: T.FaultReport(flags[i], by[i], resid[i])
              for i, n in enumerate(names)}, mode="deferred")
-        return out, rep
+        # out_d is the detect pass's raw output: equal to `out` on the
+        # clean path (the cond returns it untouched), the *faulty* values
+        # on a corrective rerun - so out vs out_d localizes which rows a
+        # correction actually changed (serving uses this per slot).
+        return (out, rep, out_d) if with_detect_out else (out, rep)
 
 
 def run_deferred(any_flag, clean_out, correct_fn: Callable, n_layers: int):

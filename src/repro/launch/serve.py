@@ -1,5 +1,10 @@
-"""Batched serving driver: prefill + decode loop with ABFT protection and
-per-step fault verdicts.
+"""Batched serving driver - a thin shim over repro.serving.
+
+The fixed-batch prefill+decode loop this module used to implement lives
+in `repro.serving.ProtectedSession` now (continuous batching, deferred
+ProtectedModel protection, per-request fault/SLO accounting); serve()
+keeps the legacy surface (tokens array + summary stats) for the drivers
+and tests, plus the full per-request report under "report".
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m-smoke \
       --batch 4 --prompt-len 32 --gen 16
@@ -14,56 +19,52 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as C
-from repro.launch.steps import make_prefill_step, make_serve_step
+import repro.core as ft
 from repro.models.transformer import init_params
+from repro.serving import ProtectedSession
 
 
-def serve(arch: str, batch: int, prompt_len: int, gen: int, seed: int = 0):
+def serve(arch: str, batch: int, prompt_len: int, gen: int, seed: int = 0,
+          audit_every: int = 0):
     cfg = C.get(arch)
-    key = jax.random.PRNGKey(seed)
-    params = init_params(key, cfg)
+    # split: one stream for params, one for prompts (a shared key would
+    # correlate the weights with the traffic)
+    kp, kt = jax.random.split(jax.random.PRNGKey(seed))
+    params = init_params(kp, cfg)
     max_len = prompt_len + gen
 
     tok_shape = ((batch, prompt_len, cfg.num_codebooks) if cfg.num_codebooks
                  else (batch, prompt_len))
-    prompts = jax.random.randint(key, tok_shape, 0, cfg.vocab_size,
-                                 jnp.int32)
+    prompts = np.asarray(jax.random.randint(kt, tok_shape, 0,
+                                            cfg.vocab_size, jnp.int32))
 
-    prefill_fn = jax.jit(make_prefill_step(cfg, max_len))
-    serve_fn = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
-
+    plan = (ft.build_plan(params, cfg, batch=batch, seq=max_len)
+            if cfg.abft else None)
+    sess = ProtectedSession(params, cfg, plan, slots=batch,
+                            max_len=max_len, audit_every=audit_every)
     t0 = time.time()
-    out = prefill_fn(params, {"tokens": prompts})
-    caches = out["caches"]
-    # the prefill pass runs under the same protection plan as decode; its
-    # verdict covers the whole prompt and must land in the fault tally
-    prefill_report = jax.tree.map(np.asarray, out["report"])
-    nxt = jnp.argmax(out["logits"], axis=-1).astype(jnp.int32)
-    if cfg.num_codebooks and nxt.ndim == 2:
-        nxt = nxt[..., None].repeat(cfg.num_codebooks, -1)
-    t_prefill = time.time() - t0
+    rids = [sess.submit(prompts[i], max_new_tokens=gen)
+            for i in range(batch)]
+    report = sess.run()
+    wall = time.time() - t0
 
-    positions = jnp.asarray(prompt_len, jnp.int32)
-    # host copies: the batch arg is donated to the decode step, so device
-    # buffers from previous iterations are invalidated
-    generated = [np.asarray(nxt)]
-    reports = []
-    t0 = time.time()
-    for _ in range(gen - 1):
-        out = serve_fn(params, {"tokens": nxt, "positions": positions,
-                                "caches": caches})
-        caches, positions = out["caches"], out["positions"]
-        nxt = out["next_tokens"]
-        reports.append(jax.tree.map(np.asarray, out["report"]))
-        generated.append(np.asarray(nxt))
-    t_decode = time.time() - t0
-    tokens_out = jnp.concatenate([jnp.asarray(g) for g in generated], axis=1)
-    prefill_detected = int(prefill_report.detected)
-    detected = prefill_detected + sum(int(r.detected) for r in reports)
-    return tokens_out, {"prefill_s": t_prefill, "decode_s": t_decode,
-                        "tok_per_s": batch * (gen - 1) / max(t_decode, 1e-9),
-                        "prefill_detected": prefill_detected,
-                        "faults_detected": detected}
+    tokens_out = np.stack([np.asarray(sess.tokens_for(r), np.int32)
+                           for r in rids])
+    recs = {r["id"]: r for r in report["requests"]}
+    # prefill time = admission->first-token spans; decode is the rest of
+    # the wall (the session accumulates stats on device - no per-step
+    # report transfers to subtract out)
+    t_prefill = sum(recs[r]["ttft_s"] or 0.0 for r in rids)
+    t_decode = max(wall - t_prefill, 0.0)
+    prefill_detected = sum(recs[r]["prefill_detected"] for r in rids)
+    return tokens_out, {
+        "prefill_s": t_prefill, "decode_s": t_decode,
+        # every emitted token counts, including each prefill's argmax
+        "tok_per_s": batch * gen / max(wall, 1e-9),
+        "prefill_detected": prefill_detected,
+        "faults_detected": report["counters"]["faults_detected"],
+        "report": report,
+    }
 
 
 def main():
@@ -74,7 +75,11 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     args = ap.parse_args()
     toks, stats = serve(args.arch, args.batch, args.prompt_len, args.gen)
-    print(f"generated {toks.shape} tokens; {stats}")
+    rep = stats["report"]
+    print(f"generated {toks.shape} tokens; "
+          f"tok/s={stats['tok_per_s']:.1f} "
+          f"ttft_p50={rep['ttft_p50_s']:.3f}s "
+          f"faults={stats['faults_detected']}")
 
 
 if __name__ == "__main__":

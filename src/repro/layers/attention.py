@@ -105,7 +105,7 @@ def apply_attention(
     abft: Optional[ProtectConfig],
     positions: jnp.ndarray,            # (B, S) or (1, S)
     cache: Optional[Dict] = None,      # {"k","v": (B, L, Hkv, hd)}
-    cache_pos: Optional[jnp.ndarray] = None,  # scalar write position
+    cache_pos: Optional[jnp.ndarray] = None,  # scalar or (B,) write position
 ) -> Tuple[jnp.ndarray, FaultReport, Optional[Dict]]:
     b, s, d = x.shape
     hd, hq, hkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
@@ -130,17 +130,31 @@ def apply_attention(
     k = apply_rope(k, sin_b, cos_b)
 
     if cache is not None:
-        # synchronized-batch write at a scalar position: a batch-0 start
-        # keeps the DUS local under batch sharding (per-request ragged
-        # positions would force a cache gather; continuous batching would
-        # use a one-hot masked update instead - see DESIGN.md)
-        zero = jnp.zeros((), jnp.int32)
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype),
-            (zero, cache_pos.astype(jnp.int32), zero, zero))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype),
-            (zero, cache_pos.astype(jnp.int32), zero, zero))
+        cp = cache_pos.astype(jnp.int32)
+        if cp.ndim == 1:
+            # continuous batching: per-slot write positions. A one-hot
+            # masked update stays local under batch sharding (a per-row
+            # dynamic_update_slice would need a gather); only the decode
+            # shape (one new row per slot) is supported.
+            if s != 1:
+                raise ValueError(
+                    "apply_attention: vector cache_pos requires a single "
+                    f"new position per row (got seq len {s})")
+            hit = (jnp.arange(cache["k"].shape[1], dtype=jnp.int32)[None, :]
+                   == cp[:, None])                    # (B, L)
+            sel = hit[:, :, None, None]
+            ck = jnp.where(sel, k.astype(cache["k"].dtype), cache["k"])
+            cv = jnp.where(sel, v.astype(cache["v"].dtype), cache["v"])
+        else:
+            # synchronized-batch write at a scalar position: a batch-0
+            # start keeps the DUS local under batch sharding
+            zero = jnp.zeros((), jnp.int32)
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype),
+                (zero, cp, zero, zero))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype),
+                (zero, cp, zero, zero))
         kv_pos = jnp.arange(ck.shape[1], dtype=jnp.int32)
         out = _attn_core(q.reshape(b, s, hkv, g, hd), ck, cv,
                          positions, kv_pos, kind=kind,

@@ -358,12 +358,17 @@ def prefill(params, tokens, cfg, max_len: int):
 
 
 def decode_step(params, tokens, caches, position, cfg):
-    """One synchronized decode step. tokens: (B, 1[, K]); position: scalar
-    current write position. Returns (logits (B,1,...), report, caches)."""
-    position = jnp.asarray(position, jnp.int32).reshape(())
+    """One decode step. tokens: (B, 1[, K]); position: scalar (synchronized
+    batch) or (B,) vector (per-slot continuous batching) current write
+    position. Returns (logits (B,1,...), report, caches)."""
+    position = jnp.asarray(position, jnp.int32)
+    if position.ndim == 0:
+        positions = position[None, None]            # (1, 1) broadcast row
+    else:
+        positions = position[:, None]               # (B, 1) per-slot rows
     logits, rep, _, caches = _forward(
         params, tokens, cfg, caches=caches, cache_pos=position,
-        positions=position[None, None])
+        positions=positions)
     return logits, as_fault_report(rep), caches
 
 
@@ -388,27 +393,56 @@ def train_apply(cfg):
     return apply_fn
 
 
-def prefill_apply(cfg, max_len: int):
+def prefill_apply(cfg, max_len: int, last: Optional[int] = None):
     """apply_fn for core.ProtectedModel: prefill (returns caches in the
-    output pytree, so the deferred cond reruns cache writes too)."""
+    output pytree, so the deferred cond reruns cache writes too).
+    `last` indexes the final REAL prompt row when the tokens are padded to
+    a bucket length (serving's trailing-padded prefill); default is the
+    last column."""
     def apply_fn(params, tokens):
         b = tokens.shape[0]
         caches = init_caches(cfg, b, max_len)
         logits, rep, _, caches = _forward(
             params, tokens, cfg, caches=caches,
             cache_pos=jnp.zeros((), jnp.int32))
-        return (logits[:, -1:], caches), rep
+        i = tokens.shape[1] - 1 if last is None else last
+        return (logits[:, i:i + 1], caches), rep
+    return apply_fn
+
+
+def prefill_apply_at(cfg, max_len: int):
+    """apply_fn for core.ProtectedModel: prefill with a *traced* last-row
+    index - args (params, tokens, last). One compiled program serves every
+    prompt length padded into the same bucket shape: the prompt is
+    trailing-padded, `last = plen - 1` picks the final real row, and the
+    padded cache rows are overwritten in order by subsequent decode writes
+    before any query can attend them (causal mask)."""
+    def apply_fn(params, tokens, last):
+        b = tokens.shape[0]
+        caches = init_caches(cfg, b, max_len)
+        logits, rep, _, caches = _forward(
+            params, tokens, cfg, caches=caches,
+            cache_pos=jnp.zeros((), jnp.int32))
+        li = jax.lax.dynamic_slice_in_dim(logits,
+                                          jnp.asarray(last, jnp.int32),
+                                          1, axis=1)
+        return (li, caches), rep
     return apply_fn
 
 
 def decode_apply(cfg):
-    """apply_fn for core.ProtectedModel: one synchronized decode step.
-    args: (params, tokens, caches, position)."""
+    """apply_fn for core.ProtectedModel: one decode step.
+    args: (params, tokens, caches, position); position scalar
+    (synchronized batch) or (B,) vector (per-slot continuous batching)."""
     def apply_fn(params, tokens, caches, position):
-        position = jnp.asarray(position, jnp.int32).reshape(())
+        position = jnp.asarray(position, jnp.int32)
+        if position.ndim == 0:
+            positions = position[None, None]
+        else:
+            positions = position[:, None]
         logits, rep, _, caches = _forward(
             params, tokens, cfg, caches=caches, cache_pos=position,
-            positions=position[None, None])
+            positions=positions)
         return (logits, caches), rep
     return apply_fn
 

@@ -139,6 +139,61 @@ def _default_params(state):
         else state
 
 
+class PlanAuditor:
+    """Plan-trusted at-rest weight audits with restore escalation, shared
+    by StepRunner (training/step loops) and the serving session. The plan
+    file is the root of trust - no sums are derived at startup - and on
+    divergence the auditor restores from checkpoint and re-audits, or
+    refuses with WeightDivergenceError when there is nothing to restore
+    from. `stats` may be a caller-owned dict (counters are merged via
+    setdefault so existing keys are preserved)."""
+
+    def __init__(self, plan, restore_fn: Optional[Callable] = None,
+                 params_fn: Optional[Callable] = None,
+                 stats: Optional[dict] = None):
+        self.plan = plan
+        self.restore_fn = restore_fn
+        self.params_fn = params_fn or _default_params
+        self.stats = stats if stats is not None else {}
+        self.stats.setdefault("weight_audits", 0)
+        self.stats.setdefault("weight_restores", 0)
+
+    def audit(self, state) -> bool:
+        """One plan-trusted at-rest weight audit; True = weights match the
+        plan's persisted checksums (no plan = trivially clean)."""
+        if self.plan is None:
+            return True
+        self.stats["weight_audits"] += 1
+        ok, bad = audit_weights_against_plan(self.params_fn(state),
+                                             self.plan)
+        if not ok:
+            log.error("plan-trusted weight audit failed: %s", bad[:5])
+        return ok
+
+    def audit_or_restore(self, state):
+        """Audit against the plan; on divergence restore from checkpoint
+        (or refuse to serve when there is nothing to restore from). The
+        restored state is re-audited: a checkpoint hit by the same
+        at-rest corruption (or taken from a different training point
+        than the plan encode) must not be served unverified."""
+        if self.audit(state):
+            return state
+        if self.restore_fn is None:
+            raise WeightDivergenceError(
+                "at-rest weights diverged from the ProtectionPlan's "
+                "persisted checksums and no restore_fn is configured")
+        log.error("weight/plan divergence - restoring from checkpoint")
+        self.stats["weight_restores"] += 1
+        state = self.restore_fn()
+        if not self.audit(state):
+            raise WeightDivergenceError(
+                "restored checkpoint still diverges from the "
+                "ProtectionPlan's persisted checksums - refusing to serve "
+                "(checkpoint corrupted, or plan built from different "
+                "weights)")
+        return state
+
+
 class StepRunner:
     """Runs a jitted step with verdict-driven retry/restore.
 
@@ -163,41 +218,17 @@ class StepRunner:
         self.stats = {"retries": 0, "restores": 0, "faults_detected": 0,
                       "faults_corrected": 0, "weight_audits": 0,
                       "weight_restores": 0}
+        self.auditor = PlanAuditor(plan, restore_fn=restore_fn,
+                                   params_fn=self.params_fn,
+                                   stats=self.stats)
 
     def audit(self, state) -> bool:
         """One plan-trusted at-rest weight audit; True = weights match the
         plan's persisted checksums (no plan = trivially clean)."""
-        if self.plan is None:
-            return True
-        self.stats["weight_audits"] += 1
-        ok, bad = audit_weights_against_plan(self.params_fn(state),
-                                             self.plan)
-        if not ok:
-            log.error("plan-trusted weight audit failed: %s", bad[:5])
-        return ok
+        return self.auditor.audit(state)
 
     def _audit_or_restore(self, state):
-        """Audit against the plan; on divergence restore from checkpoint
-        (or refuse to serve when there is nothing to restore from). The
-        restored state is re-audited: a checkpoint hit by the same
-        at-rest corruption (or taken from a different training point
-        than the plan encode) must not be served unverified."""
-        if self.audit(state):
-            return state
-        if self.restore_fn is None:
-            raise WeightDivergenceError(
-                "at-rest weights diverged from the ProtectionPlan's "
-                "persisted checksums and no restore_fn is configured")
-        log.error("weight/plan divergence - restoring from checkpoint")
-        self.stats["weight_restores"] += 1
-        state = self.restore_fn()
-        if not self.audit(state):
-            raise WeightDivergenceError(
-                "restored checkpoint still diverges from the "
-                "ProtectionPlan's persisted checksums - refusing to serve "
-                "(checkpoint corrupted, or plan built from different "
-                "weights)")
-        return state
+        return self.auditor.audit_or_restore(state)
 
     def _verdict(self, metrics) -> Tuple[bool, FaultReport]:
         rep: FaultReport = metrics["report"]

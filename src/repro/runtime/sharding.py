@@ -60,6 +60,19 @@ def _path_str(path) -> str:
                     for p in path)
 
 
+def head_ok(ps: str, cfg, tp: int) -> bool:
+    """Attention projections shard over 'model' only when the head count
+    divides the axis (otherwise the (B,S,H,hd) reshape would regather
+    every layer); cfg=None disables the check."""
+    if cfg is None:
+        return True
+    if re.search(r"attn/(wq|wo)/w$", ps):
+        return cfg.num_heads % tp == 0
+    if re.search(r"attn/w[kv]/w$", ps):
+        return cfg.num_kv_heads % tp == 0
+    return True
+
+
 def spec_for_param(path: str, ndim: int, mesh: Mesh) -> P:
     d = data_axes(mesh)
     d = d if len(d) > 1 else (d[0] if d else None)
@@ -89,13 +102,7 @@ def param_shardings(params, mesh: Mesh, cfg=None, dp_only: bool = False,
     tp = mesh.shape.get("model", 1)
 
     def _head_ok(ps: str) -> bool:
-        if cfg is None:
-            return True
-        if re.search(r"attn/(wq|wo)/w$", ps):
-            return cfg.num_heads % tp == 0
-        if re.search(r"attn/w[kv]/w$", ps):
-            return cfg.num_kv_heads % tp == 0
-        return True
+        return head_ok(ps, cfg, tp)
 
     flat, tdef = jax.tree_util.tree_flatten_with_path(params)
     out = []
@@ -205,3 +212,46 @@ def cache_shardings(caches, mesh: Mesh, batch: int):
             spec = P(None, *spec)
         out.append(NamedSharding(mesh, spec))
     return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def checksum_shardings(plan, mesh: Mesh, cfg=None):
+    """{entry name -> (cw1 sharding, cw2 sharding)} placing each matmul
+    entry's weight checksums by the SAME rule as the weight they encode:
+    a (K, M) weight with spec (kspec, mspec) has (M/chunk, K) checksums,
+    so the checksum spec is the transposed weight spec - column-sharded
+    weights get row-sharded checksums and the protected contraction runs
+    against colocated shards. Conv checksums, w_view entries (weight
+    views don't follow the leaf rule) and anything without the matmul
+    (blocks, K) layout replicate. Stacked entries keep a replicated
+    leading stage axis, mirroring param_shardings."""
+    repl = NamedSharding(mesh, P())
+    tp = mesh.shape.get("model", 1)
+    out = {}
+    for name, e in plan.entries.items():
+        if e.wck is None:
+            continue
+        if (e.op.kind != "matmul" or e.w_view is not None
+                or not hasattr(e.wck, "col_chunk")):
+            out[name] = (repl, repl)
+            continue
+        ps = name + "/w"
+        if not head_ok(ps, cfg, tp):
+            out[name] = (repl, repl)
+            continue
+        if e.stack:
+            # scanned-stage checksums ride the scan's xs into the deferred
+            # cond; on this XLA (CPU SPMD) a K-sharded xs there hits an
+            # "involuntary full rematerialization" in the partitioner that
+            # double-counts the checksum-side contraction (c == 2*s, a
+            # guaranteed false positive). Replicating ON the mesh is clean
+            # and the arrays are O(K) - placement, not partitioning, is
+            # what keeps them colocated with the scan.
+            out[name] = (repl, repl)
+            continue
+        wspec = spec_for_param(ps, 2, mesh)
+        names = list(wspec) + [None] * (2 - len(wspec))
+        cspec = _legalize(P(names[1], names[0]),
+                          tuple(e.wck.cw1.shape), mesh)
+        sh = NamedSharding(mesh, cspec)
+        out[name] = (sh, sh)
+    return out

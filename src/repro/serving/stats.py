@@ -1,0 +1,111 @@
+"""Per-request fault/SLO accounting for the serving session.
+
+The paper's serving story needs more than one summed fault scalar: an
+operator has to know WHICH request was touched by a fault, whether it was
+corrected, and what the protection cost in first-token latency. Each
+request therefore carries admission/first-token/completion timestamps,
+token counts and fault attribution, and the session surfaces them as a
+`ServingStats` report (schema "repro.serving/v1").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """SLO + fault ledger for one request (timestamps from
+    time.perf_counter, relative to session creation)."""
+    id: int
+    prompt_len: int
+    max_new_tokens: int
+    slot: Optional[int] = None
+    admitted_at: Optional[float] = None      # left the queue (prefill start)
+    first_token_at: Optional[float] = None
+    completed_at: Optional[float] = None
+    finish_reason: Optional[str] = None      # "eos" | "length" | "max_len"
+    tokens: List = dataclasses.field(default_factory=list)
+    prefill_detected: int = 0
+    faults_detected: int = 0                 # steps whose fault hit this slot
+    corrections_applied: int = 0
+    residuals: int = 0
+    audit_verdicts: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def tokens_generated(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.admitted_at is None or self.first_token_at is None:
+            return None
+        return self.first_token_at - self.admitted_at
+
+    def as_dict(self) -> dict:
+        return {"id": self.id, "slot": self.slot,
+                "prompt_len": self.prompt_len,
+                "max_new_tokens": self.max_new_tokens,
+                "admitted_at": self.admitted_at,
+                "first_token_at": self.first_token_at,
+                "completed_at": self.completed_at,
+                "ttft_s": self.ttft,
+                "finish_reason": self.finish_reason,
+                "tokens_generated": self.tokens_generated,
+                "prefill_detected": self.prefill_detected,
+                "faults_detected": self.faults_detected,
+                "corrections_applied": self.corrections_applied,
+                "residuals": self.residuals,
+                "audit_verdicts": list(self.audit_verdicts)}
+
+
+def _pct(xs: List[float], q: float) -> Optional[float]:
+    if not xs:
+        return None
+    xs = sorted(xs)
+    i = min(len(xs) - 1, max(0, int(round(q * (len(xs) - 1)))))
+    return xs[i]
+
+
+class ServingStats:
+    """Aggregates RequestRecords + session counters into the report."""
+
+    SCHEMA = "repro.serving/v1"
+
+    def __init__(self):
+        self.records: Dict[int, RequestRecord] = {}
+        self.counters: Dict[str, int] = {
+            "steps": 0, "decode_steps": 0, "prefills": 0,
+            "faults_detected": 0, "faults_corrected": 0,
+            "faults_unattributed": 0, "residual_steps": 0,
+            "weight_audits": 0, "weight_restores": 0, "dropped": 0,
+        }
+        self.wall_s: float = 0.0
+
+    def record(self, rid: int) -> RequestRecord:
+        return self.records[rid]
+
+    def add(self, rec: RequestRecord) -> RequestRecord:
+        self.records[rec.id] = rec
+        return rec
+
+    def completed(self) -> List[RequestRecord]:
+        return [r for r in self.records.values()
+                if r.completed_at is not None]
+
+    def report(self) -> dict:
+        done = self.completed()
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        toks = sum(r.tokens_generated for r in done)
+        return {
+            "schema": self.SCHEMA,
+            "requests": [r.as_dict() for r in
+                         sorted(self.records.values(), key=lambda r: r.id)],
+            "counters": dict(self.counters),
+            "completed": len(done),
+            "tokens_total": toks,
+            "wall_s": self.wall_s,
+            "tok_per_s": toks / self.wall_s if self.wall_s > 0 else None,
+            "ttft_p50_s": _pct(ttfts, 0.50),
+            "ttft_p95_s": _pct(ttfts, 0.95),
+        }

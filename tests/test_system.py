@@ -78,37 +78,26 @@ def test_serve_driver_end_to_end():
     assert stats["faults_detected"] == 0
 
 
-def test_serve_counts_prefill_verdict(monkeypatch):
+def test_serve_counts_prefill_verdict():
     """Regression: serve() used to drop the prefill step's fault report
     on the floor - a fault caught while processing the whole prompt never
-    reached faults_detected. Fake steps make the prefill verdict the only
-    signal."""
+    reached faults_detected. Inject a real fault into the head matmul of
+    prefill traces only (sequence dim > 1) and require it in the tally."""
+    import repro.configs as C
     import repro.launch.serve as S
-    from repro.core import FaultReport
+    from repro.core import injection as inj
 
-    def fake_make_prefill_step(cfg, max_len):
-        def step(params, batch):
-            b = batch["tokens"].shape[0]
-            one = jnp.ones((), jnp.int32)
-            return {"logits": jnp.zeros((b, 1, cfg.vocab_size)),
-                    "report": FaultReport(one, jnp.zeros((), jnp.int32),
-                                          one),
-                    "caches": {"k": jnp.zeros((b, 1))}}
-        return step
+    cfg = C.get("smollm-360m-smoke")
+    head = "embed/table" if cfg.tie_embeddings else "embed/head"
 
-    def fake_make_serve_step(cfg):
-        def step(params, batch):
-            b = batch["tokens"].shape[0]
-            return {"next_tokens": jnp.zeros((b, 1), jnp.int32),
-                    "logits": jnp.zeros((b, 1, cfg.vocab_size)),
-                    "report": FaultReport.clean(),
-                    "caches": batch["caches"],
-                    "positions": batch["positions"] + 1}
-        return step
+    def hook(o):
+        if o.ndim == 3 and o.shape[1] > 1:      # prefill rows only
+            return o.at[0, 0, 0].add(jnp.asarray(1e4, o.dtype))
+        return o
 
-    monkeypatch.setattr(S, "make_prefill_step", fake_make_prefill_step)
-    monkeypatch.setattr(S, "make_serve_step", fake_make_serve_step)
-    toks, stats = S.serve("smollm-360m-smoke", batch=2, prompt_len=4,
-                          gen=3)
-    assert stats["prefill_detected"] == 1
-    assert stats["faults_detected"] == 1
+    with inj.fault_scope(head, hook):
+        toks, stats = S.serve("smollm-360m-smoke", batch=2, prompt_len=4,
+                              gen=3)
+    assert toks.shape == (2, 3)
+    assert stats["prefill_detected"] == 2        # one per admitted prompt
+    assert stats["faults_detected"] >= stats["prefill_detected"]
