@@ -31,6 +31,7 @@ from repro.core import (ProtectionPlan, conv_entry, correct_op, matmul_entry,
                         path_scope, plan_scope, protect_op, protect_site,
                         resolve_entry)
 from repro.core import types as T
+from repro.core import weight_repair as WR
 from repro.kernels import ref
 
 from .report import CampaignResult, CellResult, summarize_cell
@@ -140,6 +141,50 @@ def _score(out, rep: T.FaultReport, o_ref) -> TrialOutcome:
                         (err <= TOL_REL * scale).astype(jnp.int32), err)
 
 
+def _weight_correctable_ids(models: List[inj.FaultModel]) -> List[int]:
+    return [fm.model_id for fm in models
+            if fm.target == "weight" and fm.correctable]
+
+
+def _weight_repair_outcome(entry, w_run, o_ref, o_fix_fn) -> TrialOutcome:
+    """Score the audit ladder's in-place repair rung for one trial: solve
+    the corrupted weights against the entry's locator sums on device
+    (core.weight_repair, f32 path), recompute the output from the
+    repaired weights through the same reference oracle, and report the
+    verdict in TrialOutcome terms - detected = locator residuals fired,
+    corrected_by = W_REPAIR, residual = the ladder would have escalated
+    to a checkpoint restore (so run.check's zero-residual gate IS the
+    zero-restores gate for this arm)."""
+    tol = WR.locator_tol(entry.wlc, WR.REPAIR_RTOL, xp=jnp)
+    if entry.op.kind == "conv":
+        w_fix, verdict = WR.repair_conv_weight(w_run, entry.wlc, tol)
+    else:
+        w_fix, verdict = WR.repair_matmul_weight(w_run, entry.wlc, tol)
+    o_fix = o_fix_fn(w_fix)
+    scale = jnp.max(jnp.abs(o_ref)) + 1.0
+    err = jnp.max(jnp.abs(o_fix.astype(F32) - o_ref.astype(F32)))
+    repaired = verdict == WR.REPAIRED
+    return TrialOutcome(
+        (verdict != WR.CLEAN).astype(jnp.int32),
+        jnp.where(repaired, T.W_REPAIR, T.NONE).astype(jnp.int32),
+        (verdict == WR.ESCALATE).astype(jnp.int32),
+        (repaired & (err <= TOL_REL * scale)).astype(jnp.int32),
+        err)
+
+
+def _merge_weight_repair(models: List[inj.FaultModel], model_id,
+                         base: TrialOutcome, rep: TrialOutcome
+                         ) -> TrialOutcome:
+    """Trials of weight-correctable fault arms are scored by the repair
+    path; every other arm keeps the protected-op score. The id list is
+    static, so one compiled program per (layer, scheme) still serves the
+    whole fault registry."""
+    ids = jnp.asarray(_weight_correctable_ids(models), jnp.int32)
+    is_wrep = jnp.any(model_id == ids)
+    return TrialOutcome(*(jnp.where(is_wrep, r, b)
+                          for b, r in zip(base, rep)))
+
+
 def _switch_inject(models: List[inj.FaultModel], block_shape, max_elems: int,
                    target: str = "output"):
     """(key, model_id, X) -> corrupted X, dispatching plan+apply over the
@@ -214,7 +259,14 @@ def _matmul_trial(case: MatmulCase, cfg: T.ProtectConfig, max_elems: int,
             out, rep = _deferred_protect(entry, d, w_run, o_bad)
         else:
             out, rep = protect_op(entry.op, (d, w_run), entry=entry, o=o_bad)
-        return _score(out, rep, o_ref)
+        outcome = _score(out, rep, o_ref)
+        if _weight_correctable_ids(models):
+            wrep = _weight_repair_outcome(
+                entry, w_run, o_ref,
+                lambda wf: ref.abft_matmul_ref(d, wf, bm=case.n,
+                                               bn=case.m)[0])
+            outcome = _merge_weight_repair(models, model_id, outcome, wrep)
+        return outcome
 
     return trial
 
@@ -249,7 +301,15 @@ def _transformer_gemm_trial(case: TransformerGemmCase, cfg: T.ProtectConfig,
             else:
                 out, rep = protect_site("gate", (d, w_run), entry=entry,
                                         o=o_bad)
-        return _score(out, rep, o_ref)
+            outcome = _score(out, rep, o_ref)
+            if _weight_correctable_ids(models):
+                wrep = _weight_repair_outcome(
+                    entry, w_run, o_ref,
+                    lambda wf: ref.abft_matmul_ref(d, wf, bm=case.n,
+                                                   bn=case.m)[0])
+                outcome = _merge_weight_repair(models, model_id, outcome,
+                                               wrep)
+        return outcome
 
     return trial
 
@@ -273,7 +333,13 @@ def _conv_trial(case: ConvCase, cfg: T.ProtectConfig, max_elems: int,
             out, rep = _deferred_protect(entry, d, w_run, o_bad)
         else:
             out, rep = protect_op(entry.op, (d, w_run), entry=entry, o=o_bad)
-        return _score(out, rep, o_ref)
+        outcome = _score(out, rep, o_ref)
+        if _weight_correctable_ids(models):
+            wrep = _weight_repair_outcome(
+                entry, w_run, o_ref,
+                lambda wf: ref.conv2d_ref(d, wf, stride=case.stride))
+            outcome = _merge_weight_repair(models, model_id, outcome, wrep)
+        return outcome
 
     return trial
 

@@ -50,14 +50,22 @@ def check(result: CampaignResult, min_correction: float = 0.99) -> list:
         # ladder cannot fix by construction (weight_corrupt: the fix is
         # reloading weights from the plan-trusted root, runtime.ft's job)
         correctable = (not known) or inj.FAULT_MODELS[c.fault].correctable
+        weight_arm = known and inj.FAULT_MODELS[c.fault].target == "weight"
         if c.scheme != "detect" and correctable:
-            if detectable and c.correction_rate < min_correction:
+            # weight-correctable arms are scored by the audit ladder's
+            # in-place repair rung, whose contract is absolute: 100%
+            # recovery, and zero trials escalating to a checkpoint
+            # restore (residual encodes "would restore" there)
+            want = 1.0 if weight_arm else min_correction
+            if detectable and c.correction_rate < want:
                 bad.append(f"{name}: correction_rate="
                            f"{c.correction_rate:.4f} "
-                           f"(want >= {min_correction})")
+                           f"(want >= {want})")
             if c.residual_rate > 0:
                 bad.append(f"{name}: residual_rate={c.residual_rate:.4f} "
-                           "(want 0)")
+                           "(want 0)"
+                           + (" - repair escalated to restore"
+                              if weight_arm else ""))
     return bad
 
 

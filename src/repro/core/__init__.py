@@ -2,6 +2,9 @@
 workflow) for convolution and its exact block-level generalisation to
 matmul, plus the offline-compiled model-level ProtectionPlan API."""
 from . import checksums, injection, plan, policy, schemes, thresholds
+from . import weight_repair
+from .checksums import (WeightLocators, weight_locators_conv,
+                        weight_locators_matmul)
 from .protected import (WeightChecksums, abft_matmul_vjp, pick_chunk,
                         protect_matmul_output, protected_conv,
                         protected_grouped_matmul, protected_matmul,
@@ -9,15 +12,18 @@ from .protected import (WeightChecksums, abft_matmul_vjp, pick_chunk,
 from .injection import (CONTROL_MODEL, FAULT_MODELS, FaultModel, FaultSpec,
                         fault_model_names, register_fault_model)
 from .plan import (OpSite, OpSpec, PlanEntry, PlanStaleError, ProtectionPlan,
-                   ProtectionSpec, apply_w_view, build_plan,
+                   ProtectionSpec, apply_w_view, apply_w_view_inv,
+                   build_plan,
                    calibrate_tau_factor, conv_entry, correct_op,
                    current_path, entry_overrides, force_fused_matmul,
                    grouped_matmul_entry,
                    matmul_entry, ambient_mode, path_scope, plan_scope,
                    protect_op, protect_site, protection_spec, resolve_entry,
-                   stacked_weight_checksums_matmul, weight_leaf)
+                   stacked_weight_checksums_matmul,
+                   stacked_weight_locators_matmul, weight_leaf)
 from .types import (CHECKSUM_REFRESH, CLC, COC, DEFAULT_CONFIG, FC, NONE, RC,
-                    RECOMPUTE, SCHEME_NAMES, DetectEvidence, FaultReport,
+                    RECOMPUTE, SCHEME_NAMES, W_REPAIR, DetectEvidence,
+                    FaultReport,
                     ModelReport, ProtectConfig, as_fault_report,
                     clean_report, default_kernel_interpret, merge_verdicts,
                     scheme_histogram)
@@ -25,6 +31,9 @@ from .workflow import ProtectedModel
 
 __all__ = [
     "checksums", "injection", "plan", "policy", "schemes", "thresholds",
+    "weight_repair", "WeightLocators", "weight_locators_conv",
+    "weight_locators_matmul", "stacked_weight_locators_matmul",
+    "apply_w_view_inv", "W_REPAIR",
     "WeightChecksums", "abft_matmul_vjp", "pick_chunk",
     "protect_matmul_output", "protected_conv", "protected_grouped_matmul",
     "protected_matmul", "weight_checksums_matmul",

@@ -12,10 +12,11 @@ All checksums are carried in fp32 regardless of the operand dtype.
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .types import OutputChecksums, OutputSums
 
@@ -297,6 +298,89 @@ def output_checksums_conv(
     else:
         c1 = c2 = c3 = c4 = None
     return OutputChecksums(c1, c2, c3, c4, c5, c6, c7)
+
+
+# --------------------------------------------------------------------------
+# weight locator sums (at-rest repair side information)
+#
+# The weight-side sibling of the output-side CoC locator: per col_chunk
+# block of W, FOUR sums - plain and index-weighted, over both the row and
+# the column axis of the block. Detection only needs one side (the
+# persisted cw1/cw2); with both sides a single-row or single-column
+# corruption inside a block is fully *localized* (which rows / which
+# columns diverge) and the per-element damage is read straight off the
+# first-order residuals, so the audit can repair in place instead of
+# escalating to a checkpoint restore (arXiv:1910.14479's in-place story).
+#
+# Offline (concrete weights) the sums are carried in float64: residuals
+# of f64 sums over f32/int8 data sit ~1e-13 relative, far below an f32
+# half-ulp, so a repaired f32 leaf casts back bitwise-identical to the
+# original (and integer leaves repair exactly). Under a trace (campaign
+# trials) the sums fall back to f32 on device and repairs verify within
+# tolerance instead of bitwise.
+# --------------------------------------------------------------------------
+
+class WeightLocators(NamedTuple):
+    """Per-block 2D locator sums of one weight tensor.
+
+    matmul W[K,M] with resolved block width `cb` (mb = M/cb blocks):
+      r1/r2: (mb, K) per-block row sums (plain / column-index-weighted) -
+             f64 duplicates of cw1/cw2; c1/c2: (mb, cb) per-block column
+             sums (plain / row-index-weighted).
+    conv W[M,Ch,R,R], flattened to one (M, J=Ch*R*R) block (`cb` = 0):
+      r1/r2: (M,) per-filter sums (plain / j-weighted); c1/c2: (J,)
+      per-position sums - f64 duplicates of the flattened cw1/cw2.
+    Stacked scanned-stage entries carry a leading reps axis on all four.
+    """
+    r1: Any
+    r2: Any
+    c1: Any
+    c2: Any
+    cb: int
+
+
+def weight_locators_matmul(w, col_chunk: int) -> WeightLocators:
+    """Locator sums of W[K,M], chunked exactly like weight_checksums_matmul
+    (same pick_chunk, so block b of the locators is block b of cw1/cw2)."""
+    from .protected import pick_chunk  # lazy: protected imports this module
+    k, m = int(w.shape[0]), int(w.shape[1])
+    cb = pick_chunk(m, col_chunk)
+    mb = m // cb
+    if isinstance(w, jax.core.Tracer):
+        w3 = w.astype(F32).reshape(k, mb, cb)
+        r1 = jnp.einsum("kbc->bk", w3)
+        r2 = jnp.einsum("kbc,c->bk", w3, jnp.arange(cb, dtype=F32))
+        c1 = jnp.einsum("kbc->bc", w3)
+        c2 = jnp.einsum("kbc,k->bc", w3, jnp.arange(k, dtype=F32))
+        return WeightLocators(r1, r2, c1, c2, cb)
+    w3 = np.asarray(w).astype(np.float64).reshape(k, mb, cb)
+    r1 = np.einsum("kbc->bk", w3)
+    r2 = np.einsum("kbc,c->bk", w3, np.arange(cb, dtype=np.float64))
+    c1 = np.einsum("kbc->bc", w3)
+    c2 = np.einsum("kbc,k->bc", w3, np.arange(k, dtype=np.float64))
+    return WeightLocators(r1, r2, c1, c2, cb)
+
+
+def weight_locators_conv(w) -> WeightLocators:
+    """Locator sums of W[M,Ch,R,R] viewed as one (M, Ch*R*R) block.
+    Group-agnostic: per-filter and per-position sums do not depend on the
+    group structure, so one recipe serves dense and grouped convs."""
+    m = int(w.shape[0])
+    j = 1
+    for s in w.shape[1:]:
+        j *= int(s)
+    if isinstance(w, jax.core.Tracer):
+        wf = w.astype(F32).reshape(m, j)
+        r1 = jnp.sum(wf, axis=1)
+        r2 = wf @ jnp.arange(j, dtype=F32)
+        c1 = jnp.sum(wf, axis=0)
+        c2 = jnp.arange(m, dtype=F32) @ wf
+        return WeightLocators(r1, r2, c1, c2, 0)
+    wf = np.asarray(w).astype(np.float64).reshape(m, j)
+    iota_j = np.arange(j, dtype=np.float64)
+    iota_m = np.arange(m, dtype=np.float64)
+    return WeightLocators(wf.sum(axis=1), wf @ iota_j,
+                          wf.sum(axis=0), iota_m @ wf, 0)
 
 
 def absdot_conv(cd1: jnp.ndarray, cw1: jnp.ndarray, stride: int = 1,

@@ -313,6 +313,30 @@ def plan_weight_corrupt(key, n, m, p, max_elems: int = 100) -> FaultSpec:
                  _exponent_scale(k2), 1.0, _span_offsets(k3, span, max_elems))
 
 
+@register_fault_model("weight_corrupt_correctable", target="weight",
+                      correctable=True)
+def plan_weight_corrupt_correctable(key, n, m, p,
+                                    max_elems: int = 100) -> FaultSpec:
+    """Weight corruption confined to ONE locator block - the damage class
+    the audit ladder's in-place repair rung (core.weight_repair) must
+    solve at 100% with zero checkpoint restores. The dims are W's block
+    dims: matmul (K, M, 1) corrupts 1..K elements of a single column of
+    W (one chunk block, single-column case); conv (M, Ch, R*R) corrupts
+    1..Ch*R*R elements of a single filter (one row of the flattened
+    (M, Ch*R*R) block). Values are OVERWRITTEN with +-2^e, e in [4, 12]
+    (scale 0) so every hit element diverges materially from the encode -
+    the localized, correctable sibling of `weight_corrupt`."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    ax = 1 if p == 1 else 0            # matmul: one column; conv: one filter
+    span = n * p if ax == 1 else m * p
+    hi = min(max_elems, span)
+    nelem = jax.random.randint(k1, (), 1, hi + 1)
+    idx = jax.random.randint(k2, (), 0, m if ax == 1 else n)
+    return _spec(FAULT_MODELS["weight_corrupt_correctable"].model_id,
+                 ax, idx, nelem, 0.0, _exponent_scale(k3),
+                 _span_offsets(k4, span, max_elems))
+
+
 # --------------------------------------------------------------------------
 # pre-registry single-shot helpers (kept for examples / scheme tests)
 # --------------------------------------------------------------------------

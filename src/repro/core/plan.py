@@ -86,6 +86,14 @@ W_VIEWS = {
     "tied_head": lambda w: w.reshape(-1, w.shape[-1]).T,
 }
 
+# Inverse views: write a repaired GEMM weight back to the param-tree leaf
+# it was derived from (runtime.ft's in-place repair rung). Each inverse
+# takes (viewed_weight, leaf_shape) and must satisfy
+# apply_w_view(apply_w_view_inv(v, view, leaf.shape), view) == v.
+W_VIEWS_INV = {
+    "tied_head": lambda v, shape: v.T.reshape(shape),
+}
+
 
 def apply_w_view(w, view: Optional[str]):
     """Resolve a param leaf to the GEMM weight an entry was encoded from."""
@@ -97,6 +105,17 @@ def apply_w_view(w, view: Optional[str]):
     return W_VIEWS[view](w)
 
 
+def apply_w_view_inv(v, view: Optional[str], leaf_shape):
+    """Invert a weight view: map an entry's (repaired) GEMM weight back
+    onto the param leaf of shape `leaf_shape` it is derived from."""
+    if view is None:
+        return v
+    if view not in W_VIEWS_INV:
+        raise ValueError(f"weight view {view!r} has no inverse "
+                         f"(have {sorted(W_VIEWS_INV)})")
+    return W_VIEWS_INV[view](v, tuple(leaf_shape))
+
+
 @dataclasses.dataclass
 class PlanEntry:
     """One op's offline decisions: policy config + precomputed weight
@@ -105,6 +124,11 @@ class PlanEntry:
     op: OpSpec
     cfg: ProtectConfig
     wck: Any = None                 # WeightChecksums | (cw1, cw2) | None
+    # per-block 2D locator sums (checksums.WeightLocators): the repair
+    # side information the at-rest audit ladder solves single-block
+    # corruption from. Persisted in float64 alongside wck; None on
+    # policy-only / grouped entries (audit falls back to detect+restore).
+    wlc: Any = None
     w_shape: Optional[Tuple[int, ...]] = None
     w_dtype: Optional[str] = None
     # host-side fp32 content fingerprint (signed weight sum, plus the
@@ -153,6 +177,7 @@ def matmul_entry(name: str, w=None, cfg: ProtectConfig = DEFAULT_CONFIG
         return PlanEntry(name, OpSpec("matmul"), cfg)
     return PlanEntry(name, OpSpec("matmul"), cfg,
                      wck=weight_checksums_matmul(w, cfg.col_chunk),
+                     wlc=C.weight_locators_matmul(w, cfg.col_chunk),
                      w_shape=tuple(w.shape), w_dtype=str(w.dtype))
 
 
@@ -163,6 +188,7 @@ def conv_entry(name: str, w=None, cfg: ProtectConfig = DEFAULT_CONFIG,
     if w is None:
         return PlanEntry(name, op, cfg)
     return PlanEntry(name, op, cfg, wck=C.encode_w_conv(w, groups=groups),
+                     wlc=C.weight_locators_conv(w),
                      w_shape=tuple(w.shape), w_dtype=str(w.dtype))
 
 
@@ -528,8 +554,11 @@ class ProtectionPlan:
                 got_abs = float(jnp.sum(jnp.abs(w32)))
                 # tolerance scales with sum|w|, not the signed sum: for
                 # zero-mean weights the signed sum cancels to ~0 while
-                # reduction-order noise scales with the element magnitudes
-                scale = rtol * ((e.w_asum or abs(e.w_sum)) + 1.0)
+                # reduction-order noise scales with the element magnitudes.
+                # `is None`, not falsy: a recorded w_asum of 0.0 (all-zero
+                # leaf) is a legitimate scale, not a missing one.
+                scale = rtol * ((abs(e.w_sum) if e.w_asum is None
+                                 else e.w_asum) + 1.0)
                 drift = abs(got - e.w_sum)
                 if e.w_asum is not None:
                     drift = max(drift, abs(got_abs - e.w_asum))
@@ -560,7 +589,7 @@ class ProtectionPlan:
                    "w_shape": list(e.w_shape) if e.w_shape else None,
                    "w_dtype": e.w_dtype, "w_sum": e.w_sum,
                    "w_asum": e.w_asum, "stack": e.stack,
-                   "w_view": e.w_view, "wck": None}
+                   "w_view": e.w_view, "wck": None, "wlc": None}
             if isinstance(e.wck, WeightChecksums):
                 doc["wck"] = {"kind": "matmul",
                               "col_chunk": int(e.wck.col_chunk)}
@@ -571,6 +600,13 @@ class ProtectionPlan:
                 doc["wck"] = {"kind": "conv"}
                 arrays[f"{name}/cw1"] = np.asarray(cw1)
                 arrays[f"{name}/cw2"] = np.asarray(cw2)
+            if e.wlc is not None:
+                # locator sums persist in float64: the host repair path's
+                # bitwise-restoration guarantee rests on this precision
+                doc["wlc"] = {"cb": int(e.wlc.cb)}
+                for fld in ("r1", "r2", "c1", "c2"):
+                    arrays[f"{name}/wl_{fld}"] = np.asarray(
+                        getattr(e.wlc, fld), dtype=np.float64)
             entries_doc[name] = doc
         with open(json_path, "w") as f:
             json.dump({"schema": PLAN_SCHEMA, "meta": self.meta,
@@ -596,9 +632,18 @@ class ProtectionPlan:
                     wck = WeightChecksums(cw1, cw2, doc["wck"]["col_chunk"])
                 else:
                     wck = (cw1, cw2)
+            wlc = None
+            if doc.get("wlc") is not None:
+                # kept as host numpy float64 (jnp.asarray would downcast
+                # to f32 under the default x64-disabled config and void
+                # the bitwise-repair contract)
+                wlc = C.WeightLocators(
+                    payload[f"{name}/wl_r1"], payload[f"{name}/wl_r2"],
+                    payload[f"{name}/wl_c1"], payload[f"{name}/wl_c2"],
+                    int(doc["wlc"]["cb"]))
             entries[name] = PlanEntry(
                 name, OpSpec(**doc["op"]), ProtectConfig(**doc["cfg"]),
-                wck=wck,
+                wck=wck, wlc=wlc,
                 w_shape=tuple(doc["w_shape"]) if doc["w_shape"] else None,
                 w_dtype=doc["w_dtype"], w_sum=doc.get("w_sum"),
                 w_asum=doc.get("w_asum"), stack=doc.get("stack", 0),
@@ -849,6 +894,25 @@ def stacked_weight_checksums_matmul(w, col_chunk: int) -> WeightChecksums:
                            pick_chunk(w.shape[-1], col_chunk))
 
 
+def stacked_weight_locators_matmul(w, col_chunk: int) -> "C.WeightLocators":
+    """Offline locator sums of a stacked (reps, K, M) weight: one encode
+    per repeat slice, stored with a matching leading reps axis (the
+    locator sibling of stacked_weight_checksums_matmul). Concrete weights
+    encode per slice in float64 on the host; traced weights vmap the f32
+    device encoder."""
+    cb = pick_chunk(int(w.shape[-1]), col_chunk)
+    if isinstance(w, jax.core.Tracer):
+        r1, r2, c1, c2 = jax.vmap(
+            lambda ww: tuple(C.weight_locators_matmul(ww, col_chunk))[:4])(w)
+        return C.WeightLocators(r1, r2, c1, c2, cb)
+    per = [C.weight_locators_matmul(w[i], col_chunk)
+           for i in range(int(w.shape[0]))]
+    return C.WeightLocators(np.stack([p.r1 for p in per]),
+                            np.stack([p.r2 for p in per]),
+                            np.stack([p.c1 for p in per]),
+                            np.stack([p.c2 for p in per]), cb)
+
+
 def _site_entry(site: OpSite, w, cfg: ProtectConfig) -> PlanEntry:
     """Compile one OpSite against its (possibly absent) weight leaf."""
     if site.op.kind == "conv":
@@ -861,6 +925,7 @@ def _site_entry(site: OpSite, w, cfg: ProtectConfig) -> PlanEntry:
     elif site.stack:
         e = PlanEntry(site.path, site.op, cfg,
                       wck=stacked_weight_checksums_matmul(w, cfg.col_chunk),
+                      wlc=stacked_weight_locators_matmul(w, cfg.col_chunk),
                       w_shape=tuple(w.shape), w_dtype=str(w.dtype))
     else:
         e = matmul_entry(site.path, w, cfg)

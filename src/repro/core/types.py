@@ -21,10 +21,13 @@ CLC = 3           # corrected by column checksum scheme
 FC = 4            # corrected by full checksum scheme
 CHECKSUM_REFRESH = 5  # detection was caused by a corrupted checksum; output clean
 RECOMPUTE = 6     # recomputed the whole operation
+W_REPAIR = 7      # at-rest weight corruption repaired in place from the
+                  # plan's locator sums (the audit ladder's first rung)
 
 SCHEME_NAMES = {
     NONE: "none", COC: "coc", RC: "rc", CLC: "clc", FC: "fc",
     CHECKSUM_REFRESH: "checksum_refresh", RECOMPUTE: "recompute",
+    W_REPAIR: "w_repair",
 }
 
 

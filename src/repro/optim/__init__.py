@@ -1,7 +1,9 @@
 from .adamw import (OptConfig, apply_updates, clip_by_global_norm,
                     cosine_schedule, global_norm, init_opt_state)
-from .compression import allreduce_compressed, compress, decompress
+from .compression import (allreduce_compressed, compress, decompress,
+                          dequantize_weight, quantize_weight)
 
 __all__ = ["OptConfig", "apply_updates", "clip_by_global_norm",
            "cosine_schedule", "global_norm", "init_opt_state",
-           "allreduce_compressed", "compress", "decompress"]
+           "allreduce_compressed", "compress", "decompress",
+           "dequantize_weight", "quantize_weight"]

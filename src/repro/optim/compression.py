@@ -33,6 +33,29 @@ def decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
     return q.astype(F32) * scale
 
 
+def quantize_weight(w: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric int8 weight quantisation for serving
+    (-> (q int8, scale f32 scalar)). Same scheme as `compress` without
+    the error-feedback accumulator (weights are static at serving time).
+
+    The int8 leaves compose with the at-rest protection ladder: a
+    ProtectionPlan built over the *quantized* param tree encodes its
+    checksums and float64 locator sums from the int8 codes, and because
+    integer sums are exact in f64 the audit detects and the repair rung
+    restores a corrupted code EXACTLY - one plan protects int8 serving
+    weights with zero extra storage beyond the locator sums."""
+    w32 = w.astype(F32)
+    scale = jnp.max(jnp.abs(w32)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(w32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_weight(q: jnp.ndarray, scale: jnp.ndarray,
+                      dtype=F32) -> jnp.ndarray:
+    """Inverse of quantize_weight (the serving-time decode)."""
+    return (q.astype(F32) * scale).astype(dtype)
+
+
 def allreduce_compressed(g: jnp.ndarray, err: jnp.ndarray, axis_name: str
                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Mean-reduce g over `axis_name` with int8 payload + error feedback.

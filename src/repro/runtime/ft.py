@@ -7,8 +7,10 @@ step granularity:
 - residual/NaN verdicts -> bounded step retry (recompute; the paper's
   multi-fault fallback),
 - persistent weight corruption (RowHammer regime) -> audit weight
-  checksums against trusted values and restore from checkpoint (the
-  paper's 'reload weights from the CNN model'),
+  checksums against trusted values and climb the repair ladder: solve
+  single-block damage in place from the plan's locator sums, restore
+  from checkpoint only beyond that (the paper's 'reload weights from
+  the CNN model'),
 - too many consecutive failures -> restore-from-checkpoint escalation
   (node-failure handling; the driver in launch/train.py wires this to the
   CheckpointManager).
@@ -17,22 +19,24 @@ Serving (weight-stationary) deployments hand StepRunner a ProtectionPlan:
 the plan's *persisted* weight checksums are the trusted root for the
 at-rest audit - no sums are re-derived at startup (a startup derivation
 on already-corrupted weights would bless the corruption), and divergence
-escalates straight to checkpoint restore.
+climbs audit -> in-place repair -> restore -> WeightDivergenceError.
 """
 from __future__ import annotations
 
 import dataclasses
 import logging
-from typing import Any, Callable, Dict, Optional, Tuple
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (FaultReport, apply_w_view,
+from repro.core import (FaultReport, apply_w_view, apply_w_view_inv,
                         stacked_weight_checksums_matmul,
                         weight_checksums_matmul, weight_leaf)
 from repro.core import checksums as C
+from repro.core import weight_repair as WR
 
 log = logging.getLogger("repro.ft")
 F32 = jnp.float32
@@ -71,6 +75,11 @@ def audit_weights(params, trusted: Dict[str, np.ndarray],
     current = weight_checksums(params)
     bad = []
     for name, want in trusted.items():
+        if name not in current:
+            # a trusted leaf vanishing from the live tree is divergence,
+            # not a crash - report it like the plan audit does
+            bad.append(name)
+            continue
         got = current[name]
         tol = rtol * (abs(float(want)) + 1.0)
         if not np.isfinite(got) or abs(float(got) - float(want)) > tol:
@@ -107,7 +116,10 @@ def audit_weights_against_plan(params, plan, rtol: float = 1e-5
             if e.w_sum is None:
                 continue           # policy-only entry: nothing persisted
             got = float(jnp.sum(w.astype(F32)))
-            tol = rtol * ((e.w_asum or abs(e.w_sum)) + 1.0)
+            # `is None`, not falsy: a recorded w_asum of 0.0 (all-zero
+            # leaf) is a legitimate noise scale, not a missing one
+            tol = rtol * ((abs(e.w_sum) if e.w_asum is None
+                           else e.w_asum) + 1.0)
             if not np.isfinite(got) or abs(got - e.w_sum) > tol:
                 bad.append(f"{name}: weight-sum fingerprint diverged "
                            f"({got:.6g} vs plan {e.w_sum:.6g})")
@@ -139,50 +151,178 @@ def _default_params(state):
         else state
 
 
+def _default_update(state, params):
+    """Inverse of _default_params: write a repaired param tree back into
+    the carried state."""
+    if isinstance(state, dict) and "params" in state:
+        return {**state, "params": params}
+    return params
+
+
+def set_weight_leaf(params, name: str, leaf):
+    """Return a copy of the params tree with entry `name`'s weight leaf
+    replaced (same path grammar as weight_leaf; only the dicts along the
+    path are copied, untouched subtrees are shared)."""
+    parts = name.split("/")
+    out = dict(params)
+    node, cur = params, out
+    for i, part in enumerate(parts):
+        if not isinstance(node, dict) or part not in node:
+            raise KeyError(name)
+        child = node[part]
+        if i == len(parts) - 1:
+            if isinstance(child, dict):
+                if "w" not in child:
+                    raise KeyError(name)
+                cur[part] = {**child, "w": leaf}
+            else:
+                cur[part] = leaf
+        else:
+            nd = dict(child)
+            cur[part] = nd
+            node, cur = child, nd
+    return out
+
+
+def repair_weights_against_plan(params, plan, bad: List[str],
+                                rtol: float = WR.HOST_RTOL):
+    """First rung of the audit ladder: solve audit-flagged entries in
+    place from the plan's float64 locator sums (core.weight_repair).
+
+    Only the entries named in `bad` (the audit's divergence list,
+    '<name>: reason' strings) are touched - repair cost scales with the
+    damage, not the model. Returns (new_params, repaired_names); a None
+    second element means some flagged entry could not be repaired
+    (no locators, multi-block damage, failed verification) and the caller
+    must escalate to the restore rung. Repairs run in float64 on the
+    host, so f32 leaves are restored bitwise and integer (quantized)
+    leaves exactly; the damaged leaf is the only one rewritten."""
+    names: List[str] = []
+    for b in bad:
+        n = b.split(":")[0]
+        if n not in names:
+            names.append(n)
+    new_params = params
+    repaired: List[str] = []
+    for name in names:
+        e = plan.get(name) if plan is not None else None
+        if e is None or e.wlc is None:
+            return params, None
+        try:
+            leaf = weight_leaf(params, name)
+        except KeyError:
+            return params, None          # missing leaf: nothing to fix
+        w = apply_w_view(leaf, e.w_view)
+        tol = float(WR.locator_tol(e.wlc, rtol, xp=np))
+        if e.op.kind == "matmul":
+            fix = (WR.repair_stacked_matmul_weight if e.stack
+                   else WR.repair_matmul_weight)
+            fixed, verdict = fix(w, e.wlc, tol, xp=np)
+        elif e.op.kind == "conv":
+            fixed, verdict = WR.repair_conv_weight(w, e.wlc, tol, xp=np)
+        else:
+            return params, None
+        if int(verdict) != WR.REPAIRED:
+            return params, None
+        arr = apply_w_view_inv(fixed, e.w_view, np.shape(leaf))
+        np_dtype = np.asarray(leaf).dtype
+        if np.issubdtype(np_dtype, np.integer):
+            arr = np.rint(arr)           # integer deltas are f64-exact
+        new_leaf = arr.astype(np_dtype)
+        if isinstance(leaf, jax.Array):
+            new_leaf = jnp.asarray(new_leaf)
+        new_params = set_weight_leaf(new_params, name, new_leaf)
+        repaired.append(name)
+    return new_params, repaired
+
+
 class PlanAuditor:
-    """Plan-trusted at-rest weight audits with restore escalation, shared
-    by StepRunner (training/step loops) and the serving session. The plan
-    file is the root of trust - no sums are derived at startup - and on
-    divergence the auditor restores from checkpoint and re-audits, or
-    refuses with WeightDivergenceError when there is nothing to restore
-    from. `stats` may be a caller-owned dict (counters are merged via
-    setdefault so existing keys are preserved)."""
+    """Plan-trusted at-rest weight audits with a three-rung escalation
+    ladder, shared by StepRunner (training/step loops) and the serving
+    session. The plan file is the root of trust - no sums are derived at
+    startup - and on divergence the auditor:
+
+    1. repairs single-block corruption in place from the plan's locator
+       sums (`repair_weights_against_plan`) and re-audits - no restore,
+       no halted session, MTTR measured in milliseconds;
+    2. escalates multi-block / unrepairable damage to a checkpoint
+       restore and re-audits the restored state;
+    3. refuses with WeightDivergenceError when nothing can restore.
+
+    `last_verdict` ('clean' | 'repaired' | 'restored') and
+    `last_repair_s` expose the outcome of the latest audit_or_restore to
+    callers that keep their own ledgers (the serving session's
+    per-request audit trail). `stats` may be a caller-owned dict
+    (counters are merged via setdefault so existing keys are preserved).
+    `update_params_fn(state, params)` writes a repaired param tree back
+    into the carried state; the default inverts the default params_fn."""
 
     def __init__(self, plan, restore_fn: Optional[Callable] = None,
                  params_fn: Optional[Callable] = None,
-                 stats: Optional[dict] = None):
+                 stats: Optional[dict] = None,
+                 update_params_fn: Optional[Callable] = None,
+                 repair: bool = True):
         self.plan = plan
         self.restore_fn = restore_fn
         self.params_fn = params_fn or _default_params
+        self.update_params_fn = update_params_fn or _default_update
+        self.repair = repair
         self.stats = stats if stats is not None else {}
         self.stats.setdefault("weight_audits", 0)
+        self.stats.setdefault("weight_repairs", 0)
         self.stats.setdefault("weight_restores", 0)
+        self.last_verdict = "clean"
+        self.last_repair_s: Optional[float] = None
+        self.last_bad: List[str] = []
 
     def audit(self, state) -> bool:
         """One plan-trusted at-rest weight audit; True = weights match the
-        plan's persisted checksums (no plan = trivially clean)."""
+        plan's persisted checksums (no plan = trivially clean). The
+        divergence list is kept on `last_bad` for the repair rung."""
         if self.plan is None:
+            self.last_bad = []
             return True
         self.stats["weight_audits"] += 1
         ok, bad = audit_weights_against_plan(self.params_fn(state),
                                              self.plan)
+        self.last_bad = bad
         if not ok:
             log.error("plan-trusted weight audit failed: %s", bad[:5])
         return ok
 
     def audit_or_restore(self, state):
-        """Audit against the plan; on divergence restore from checkpoint
-        (or refuse to serve when there is nothing to restore from). The
-        restored state is re-audited: a checkpoint hit by the same
-        at-rest corruption (or taken from a different training point
-        than the plan encode) must not be served unverified."""
+        """Run the ladder: audit, then repair in place, then restore from
+        checkpoint, then refuse. Every rung's output is re-audited before
+        it is trusted - a repair that does not verify against the plan's
+        persisted checksums escalates instead of serving, and a restored
+        checkpoint hit by the same at-rest corruption (or taken from a
+        different training point than the plan encode) is refused."""
+        self.last_verdict = "clean"
+        self.last_repair_s = None
         if self.audit(state):
             return state
+        if self.repair:
+            t0 = time.perf_counter()
+            fixed, repaired = repair_weights_against_plan(
+                self.params_fn(state), self.plan, self.last_bad)
+            if repaired:
+                state2 = self.update_params_fn(state, fixed)
+                if self.audit(state2):
+                    self.last_repair_s = time.perf_counter() - t0
+                    self.stats["weight_repairs"] += 1
+                    self.last_verdict = "repaired"
+                    log.warning(
+                        "weight/plan divergence - repaired in place from "
+                        "locator sums (%s, %.2f ms)", repaired,
+                        self.last_repair_s * 1e3)
+                    return state2
         if self.restore_fn is None:
             raise WeightDivergenceError(
                 "at-rest weights diverged from the ProtectionPlan's "
-                "persisted checksums and no restore_fn is configured")
-        log.error("weight/plan divergence - restoring from checkpoint")
+                "persisted checksums beyond in-place repair and no "
+                "restore_fn is configured")
+        log.error("weight/plan divergence beyond in-place repair - "
+                  "restoring from checkpoint")
         self.stats["weight_restores"] += 1
         state = self.restore_fn()
         if not self.audit(state):
@@ -191,6 +331,7 @@ class PlanAuditor:
                 "ProtectionPlan's persisted checksums - refusing to serve "
                 "(checkpoint corrupted, or plan built from different "
                 "weights)")
+        self.last_verdict = "restored"
         return state
 
 
@@ -217,7 +358,7 @@ class StepRunner:
         self.step_count = 0
         self.stats = {"retries": 0, "restores": 0, "faults_detected": 0,
                       "faults_corrected": 0, "weight_audits": 0,
-                      "weight_restores": 0}
+                      "weight_repairs": 0, "weight_restores": 0}
         self.auditor = PlanAuditor(plan, restore_fn=restore_fn,
                                    params_fn=self.params_fn,
                                    stats=self.stats)

@@ -63,7 +63,8 @@ class ProtectedSession:
     Knobs: `slots` (decode batch width), `max_len` (KV capacity per
     slot), `correction` ("deferred" by default when a plan is present),
     `audit_every` (plan-trusted weight-audit cadence in session steps, 0
-    = off; divergence restores via `restore_fn` or raises
+    = off; divergence climbs the ladder: in-place repair from the plan's
+    locator sums, then restore via `restore_fn`, then
     WeightDivergenceError), `mesh` (params/caches/plan all placed by
     runtime.sharding rules), `slot_tol` (relative tolerance of the
     per-slot correction localizer; clean slots differ by exactly 0).
@@ -307,11 +308,17 @@ class ProtectedSession:
         step over all slots. Returns True while work remains."""
         if (self.plan is not None and self.audit_every
                 and self._step_count % self.audit_every == 0):
-            before = self.stats.counters["weight_restores"]
             self.params = self.auditor.audit_or_restore(self.params)
-            verdict = ("restored" if
-                       self.stats.counters["weight_restores"] > before
-                       else "clean")
+            verdict = self.auditor.last_verdict
+            if verdict == "repaired":
+                # graceful degradation: single-block weight corruption
+                # was solved in place mid-session; record the MTTR and
+                # keep serving without dropping a request
+                self.stats.repair_s.append(self.auditor.last_repair_s)
+                if self.mesh is not None:
+                    # the repaired leaf was rebuilt on the host - put it
+                    # back under the session's param shardings
+                    self.params = jax.device_put(self.params, self._pshard)
             for req in self.scheduler.active.values():
                 self.stats.record(req.id).audit_verdicts.append(verdict)
         self._step_count += 1

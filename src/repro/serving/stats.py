@@ -78,8 +78,12 @@ class ServingStats:
             "steps": 0, "decode_steps": 0, "prefills": 0,
             "faults_detected": 0, "faults_corrected": 0,
             "faults_unattributed": 0, "residual_steps": 0,
-            "weight_audits": 0, "weight_restores": 0, "dropped": 0,
+            "weight_audits": 0, "weight_repairs": 0, "weight_restores": 0,
+            "dropped": 0,
         }
+        # per-event in-place repair latencies (the MTTR ledger: time from
+        # audit hit to verified repaired weights, seconds)
+        self.repair_s: List[float] = []
         self.wall_s: float = 0.0
 
     def record(self, rid: int) -> RequestRecord:
@@ -108,4 +112,6 @@ class ServingStats:
             "tok_per_s": toks / self.wall_s if self.wall_s > 0 else None,
             "ttft_p50_s": _pct(ttfts, 0.50),
             "ttft_p95_s": _pct(ttfts, 0.95),
+            "mttr_repair_s": (sum(self.repair_s) / len(self.repair_s)
+                              if self.repair_s else None),
         }

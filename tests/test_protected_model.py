@@ -268,8 +268,10 @@ def test_audit_transformer_weights_against_plan(moe_model, tmp_path):
 def test_step_runner_audits_transformer_plan(moe_model, tmp_path):
     """StepRunner(plan=transformer_plan) polices the serving RowHammer
     regime on LLM weights exactly as on CNN weights: pre-start corruption
-    is caught on step 0 and restored from checkpoint; no restore path
-    means refusing to serve."""
+    is caught on step 0 and climbs the ladder - a single flipped element
+    of a stacked scanned-stage weight repairs in place from the loaded
+    plan's locator sums, multi-slice damage restores from checkpoint, and
+    no restore path means refusing to serve."""
     cfg, params, _, plan = moe_model
     path = str(tmp_path / "plan.json")
     plan.save(path)
@@ -286,13 +288,27 @@ def test_step_runner_audits_transformer_plan(moe_model, tmp_path):
     runner = StepRunner(step_fn, FTPolicy(audit_weights_every=1),
                         restore_fn=lambda: {"params": params}, plan=loaded)
     state, _ = runner.run({"params": corrupt}, {})
+    assert runner.stats["weight_repairs"] == 1
+    assert runner.stats["weight_restores"] == 0
+    assert runner.stats["weight_audits"] == 2    # fail + post-repair audit
+    np.testing.assert_array_equal(
+        np.asarray(state["params"]["stages"]["b0_attn_full"]["attn"]["wk"]
+                   ["w"]), np.asarray(w))
+
+    # damage in two repeat slices sits beyond the single-block contract
+    multi = jax.tree_util.tree_map(lambda x: x, params)
+    multi["stages"]["b0_attn_full"]["attn"]["wk"]["w"] = \
+        w.at[0, 0, 0].add(jnp.asarray(7.0, w.dtype)) \
+         .at[1, 1, 1].add(jnp.asarray(5.0, w.dtype))
+    runner = StepRunner(step_fn, FTPolicy(audit_weights_every=1),
+                        restore_fn=lambda: {"params": params}, plan=loaded)
+    runner.run({"params": multi}, {})
     assert runner.stats["weight_restores"] == 1
-    assert runner.stats["weight_audits"] == 2    # fail + post-restore audit
 
     runner2 = StepRunner(step_fn, FTPolicy(audit_weights_every=1),
                          plan=loaded)
     with pytest.raises(WeightDivergenceError):
-        runner2.run({"params": corrupt}, {})
+        runner2.run({"params": multi}, {})
 
 
 # --------------------------------------------------------------------------

@@ -255,49 +255,94 @@ def test_session_prefill_fault_attributed_to_request(params, cfg, plan):
 # plan-trusted weight audits on the session cadence
 # ---------------------------------------------------------------------------
 
-def _corrupt(params, plan):
-    """Flip one bit-worth of a weight the plan actually checksums."""
-    name = next(n for n, e in plan.entries.items()
-                if n.startswith("stages/") and e.wck is not None
-                and hasattr(e.wck, "cw1"))
+def _audited_entry(plan):
+    return next(n for n, e in plan.entries.items()
+                if n.startswith("stages/") and e.wlc is not None)
+
+
+def _corrupt(params, plan, flips=1):
+    """Flip `flips` weight elements of a weight the plan checksums: flip
+    i lands at index (i,)*ndim, so two flips hit distinct rows AND
+    columns - beyond the single-block in-place repair contract."""
+    name = _audited_entry(plan)
     bad = jax.tree.map(lambda x: x, params)   # fresh dict containers
     parts = name.split("/")
     parent = bad
     for part in parts[:-1]:
         parent = parent[part]
     leaf = parent[parts[-1]]
+    w = leaf["w"] if isinstance(leaf, dict) else leaf
+    for i in range(flips):
+        w = w.at[(i,) * w.ndim].add(jnp.asarray(977.0, w.dtype))
     if isinstance(leaf, dict):
-        leaf["w"] = leaf["w"].at[(0,) * leaf["w"].ndim].add(
-            jnp.asarray(977.0, leaf["w"].dtype))
+        leaf["w"] = w
     else:
-        parent[parts[-1]] = leaf.at[(0,) * leaf.ndim].add(
-            jnp.asarray(977.0, leaf.dtype))
+        parent[parts[-1]] = w
     return bad
 
 
 def test_session_audit_refuses_corrupt_weights(params, cfg, plan):
     from repro.runtime.ft import WeightDivergenceError
-    sess = ProtectedSession(_corrupt(params, plan), cfg, plan, slots=1,
-                            max_len=MAX_LEN, audit_every=1)
+    sess = ProtectedSession(_corrupt(params, plan, flips=2), cfg, plan,
+                            slots=1, max_len=MAX_LEN, audit_every=1)
     sess.submit(_prompts(cfg, (5,))[0], max_new_tokens=2)
     with pytest.raises(WeightDivergenceError):
         sess.run()
 
 
 def test_session_audit_restores_and_serves(params, cfg, plan):
-    sess = ProtectedSession(_corrupt(params, plan), cfg, plan, slots=1,
-                            max_len=MAX_LEN, audit_every=1,
+    """Multi-block damage (two flips) sits beyond the in-place repair
+    rung, so the ladder escalates to the checkpoint restore."""
+    sess = ProtectedSession(_corrupt(params, plan, flips=2), cfg, plan,
+                            slots=1, max_len=MAX_LEN, audit_every=1,
                             restore_fn=lambda: params)
     p = _prompts(cfg, (5,))[0]
     rid = sess.submit(p, max_new_tokens=3)
     report = sess.run()
     assert report["counters"]["weight_restores"] == 1
+    assert report["counters"]["weight_repairs"] == 0
     assert report["counters"]["weight_audits"] >= 2   # restore re-audits
     rec = {r["id"]: r for r in report["requests"]}[rid]
     # post-restore audits run with the request active and record verdicts
     assert "clean" in rec["audit_verdicts"]
     ucfg = cfg.replace(abft=False)
     assert sess.tokens_for(rid) == greedy_reference(params, ucfg, p, 3,
+                                                    MAX_LEN)
+
+
+def test_session_mid_stream_repair_keeps_serving(params, cfg, plan):
+    """The acceptance scenario: a single weight element flips while a
+    request is mid-stream. The next audit solves the block in place from
+    the plan's locator sums - no restore, no dropped request - and the
+    token stream stays bitwise the clean reference because the repair
+    (f64 locator solve, bitwise for f32 leaves) lands before any forward
+    runs on the corrupted weights."""
+    gen = 6
+    p = _prompts(cfg, (5,))[0]
+    name = _audited_entry(plan)
+    sess = ProtectedSession(params, cfg, plan, slots=1, max_len=MAX_LEN,
+                            audit_every=1)
+    rid = sess.submit(p, max_new_tokens=gen)
+    for _ in range(2):
+        assert sess.step()           # prefill + decode on clean weights
+    sess.params = _corrupt(sess.params, plan)    # hits `name`
+    while sess.step():
+        pass
+    report = sess.stats.report()
+    assert report["counters"]["weight_repairs"] == 1
+    assert report["counters"]["weight_restores"] == 0
+    assert report["counters"]["dropped"] == 0
+    assert report["mttr_repair_s"] is not None
+    assert report["mttr_repair_s"] > 0
+    rec = {r["id"]: r for r in report["requests"]}[rid]
+    assert "repaired" in rec["audit_verdicts"]
+    assert rec["finish_reason"] == "length"
+    # the repaired leaf is bitwise the pre-corruption original
+    np.testing.assert_array_equal(
+        np.asarray(ft.weight_leaf(sess.params, name)),
+        np.asarray(ft.weight_leaf(params, name)))
+    ucfg = cfg.replace(abft=False)
+    assert sess.tokens_for(rid) == greedy_reference(params, ucfg, p, gen,
                                                     MAX_LEN)
 
 

@@ -158,11 +158,12 @@ def test_audit_weights_against_plan(tmp_path):
     assert not ok and any("conv0" in b for b in bad)
 
 
-def test_step_runner_plan_audit_restores_pre_start_corruption(tmp_path):
+def test_step_runner_plan_audit_repairs_pre_start_corruption(tmp_path):
     """The acceptance scenario: weights corrupted AFTER the plan encode
     but BEFORE the serving process starts. A startup re-derivation of
     trusted sums would bless the corruption; the plan-trusted audit
-    catches it on step 0 and escalates to checkpoint restore."""
+    catches it on step 0 and - single-block damage - the first rung of
+    the ladder repairs it in place from the locator sums. No restore."""
     params, plan = _cnn_plan(tmp_path)
     corrupted = _flip_weight(params, "conv1", (0, 0, 0, 0))
     seen = []
@@ -175,23 +176,51 @@ def test_step_runner_plan_audit_restores_pre_start_corruption(tmp_path):
     runner = StepRunner(step_fn, FTPolicy(audit_weights_every=1),
                         restore_fn=lambda: {"params": params}, plan=plan)
     state, _ = runner.run({"params": corrupted}, {})
-    # two audits on step 0: the failing one plus the post-restore
-    # re-audit (a corrupted checkpoint must not be served unverified)
+    # two audits on step 0: the failing one plus the post-repair
+    # re-audit (a repair that does not verify must not be served)
     assert runner.stats["weight_audits"] == 2
-    assert runner.stats["weight_restores"] == 1
-    # the step ran on the RESTORED weights, not the corrupted ones
+    assert runner.stats["weight_repairs"] == 1
+    assert runner.stats["weight_restores"] == 0
+    # the step ran on the REPAIRED weights - bitwise the originals
     assert seen == [float(jnp.sum(params["conv1"]["w"]))]
-    # clean state passes the next audit without restoring again
+    np.testing.assert_array_equal(
+        np.asarray(state["params"]["conv1"]["w"]),
+        np.asarray(params["conv1"]["w"]))
+    # clean state passes the next audit without repairing again
     runner.run(state, {})
     assert runner.stats["weight_audits"] == 3
+    assert runner.stats["weight_repairs"] == 1
+
+
+def test_step_runner_plan_audit_restores_multiblock_corruption(tmp_path):
+    """Damage beyond the single-block repair contract (two filters hit)
+    escalates past the repair rung to checkpoint restore."""
+    params, plan = _cnn_plan(tmp_path)
+    corrupted = _flip_weight(
+        _flip_weight(params, "conv1", (0, 0, 0, 0)), "conv1", (1, 1, 1, 1))
+    seen = []
+
+    def step_fn(state, batch):
+        seen.append(float(jnp.sum(state["params"]["conv1"]["w"])))
+        return state, {"loss": jnp.float32(1.0),
+                       "report": core.FaultReport.clean()}
+
+    runner = StepRunner(step_fn, FTPolicy(audit_weights_every=1),
+                        restore_fn=lambda: {"params": params}, plan=plan)
+    runner.run({"params": corrupted}, {})
     assert runner.stats["weight_restores"] == 1
+    assert runner.stats["weight_repairs"] == 0
+    # the step ran on the RESTORED weights, not the corrupted ones
+    assert seen == [float(jnp.sum(params["conv1"]["w"]))]
 
 
 def test_step_runner_refuses_still_diverged_restore(tmp_path):
     """A restore that does not resolve the divergence (checkpoint hit by
-    the same at-rest corruption) is refused, not served."""
+    the same at-rest corruption) is refused, not served. Multi-row+column
+    damage keeps the repair rung out of the picture."""
     params, plan = _cnn_plan(tmp_path)
-    corrupted = _flip_weight(params, "conv1", (0, 0, 0, 0))
+    corrupted = _flip_weight(
+        _flip_weight(params, "conv1", (0, 0, 0, 0)), "conv1", (1, 1, 1, 1))
     runner = StepRunner(lambda s, b: (s, {}),
                         FTPolicy(audit_weights_every=1),
                         restore_fn=lambda: {"params": corrupted}, plan=plan)
@@ -202,10 +231,11 @@ def test_step_runner_refuses_still_diverged_restore(tmp_path):
 
 def test_step_runner_plan_audit_refuses_without_restore(tmp_path):
     params, plan = _cnn_plan(tmp_path)
-    corrupted = _flip_weight(params, "fc", (0, 0))
+    corrupted = _flip_weight(
+        _flip_weight(params, "fc", (0, 0)), "fc", (1, 1))
     runner = StepRunner(lambda s, b: (s, {}),
                         FTPolicy(audit_weights_every=1), plan=plan)
-    with pytest.raises(WeightDivergenceError):
+    with pytest.raises(WeightDivergenceError, match="in-place repair"):
         runner.run({"params": corrupted}, {})
 
 

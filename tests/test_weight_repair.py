@@ -1,0 +1,252 @@
+"""The in-place weight-repair rung: locator-sum persistence round-trips,
+the block solver's repair/escalate contract on the host (f64) and device
+(f32/jit) paths, and `repair_weights_against_plan` across dtype drift
+(bf16), quantized int8 leaves, and stacked scanned-stage weights."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import DEFAULT_CONFIG, PlanStaleError
+from repro.core import weight_repair as WR
+from repro.optim import dequantize_weight, quantize_weight
+from repro.runtime.ft import (audit_weights, audit_weights_against_plan,
+                              repair_weights_against_plan,
+                              weight_checksums)
+
+PCFG = dataclasses.replace(DEFAULT_CONFIG, col_chunk=16)
+
+
+def _matmul_plan(w):
+    """{'fc': {'w': w}} + its single-entry plan (col_chunk=16)."""
+    return ({"fc": {"w": w}},
+            core.ProtectionPlan(
+                entries={"fc": core.matmul_entry("fc", w, PCFG)}))
+
+
+def _w(key=0, shape=(8, 32), dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=dtype)
+
+
+# --------------------------------------------------------------------------
+# locator persistence
+# --------------------------------------------------------------------------
+
+def test_locators_roundtrip_float64(tmp_path):
+    """Locator sums survive save/load bitwise AND stay float64 numpy -
+    jnp would downcast to f32 and void the bitwise-repair contract."""
+    wm, wc = _w(0), _w(1, (6, 3, 3, 3))
+    plan = core.ProtectionPlan(entries={
+        "fc": core.matmul_entry("fc", wm, PCFG),
+        "conv": core.conv_entry("conv", wc, PCFG)})
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    loaded = core.ProtectionPlan.load(path)
+    for name in ("fc", "conv"):
+        got, want = loaded[name].wlc, plan[name].wlc
+        assert int(got.cb) == int(want.cb)
+        for fld in ("r1", "r2", "c1", "c2"):
+            g = getattr(got, fld)
+            assert isinstance(g, np.ndarray) and g.dtype == np.float64
+            np.testing.assert_array_equal(g, np.asarray(getattr(want, fld),
+                                                        np.float64))
+
+
+def test_old_plan_without_locators_still_loads(tmp_path):
+    """Plans saved before locator sums existed audit detect-only: load
+    must not crash, and repair reports unrepairable (escalate)."""
+    import json
+    w = _w()
+    params, plan = _matmul_plan(w)
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    with open(path) as f:
+        doc = json.load(f)
+    for e in doc["entries"].values():
+        e["wlc"] = None
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    loaded = core.ProtectionPlan.load(path)
+    assert loaded["fc"].wlc is None
+    ok, bad = audit_weights_against_plan(
+        {"fc": {"w": w.at[0, 0].add(5.0)}}, loaded)
+    assert not ok
+    _, repaired = repair_weights_against_plan(
+        {"fc": {"w": w.at[0, 0].add(5.0)}}, loaded, bad)
+    assert repaired is None
+
+
+# --------------------------------------------------------------------------
+# the host (f64) repair path: bitwise restoration
+# --------------------------------------------------------------------------
+
+def test_single_element_repairs_bitwise():
+    w = _w()
+    params, plan = _matmul_plan(w)
+    bad_params = {"fc": {"w": w.at[3, 20].add(977.0)}}
+    ok, bad = audit_weights_against_plan(bad_params, plan)
+    assert not ok
+    fixed, repaired = repair_weights_against_plan(bad_params, plan, bad)
+    assert repaired == ["fc"]
+    got = core.weight_leaf(fixed, "fc")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(w))
+    ok, _ = audit_weights_against_plan(fixed, plan)
+    assert ok
+
+
+def test_single_column_repairs_bitwise():
+    """A whole corrupted chunk column (every K row of one M index) is the
+    one-column case: dr1 down the column is the per-row damage."""
+    w = _w()
+    col = jnp.arange(8, dtype=jnp.float32) + 1.0
+    bad_params = {"fc": {"w": w.at[:, 5].add(col)}}
+    params, plan = _matmul_plan(w)
+    ok, bad = audit_weights_against_plan(bad_params, plan)
+    assert not ok
+    fixed, repaired = repair_weights_against_plan(bad_params, plan, bad)
+    assert repaired == ["fc"]
+    np.testing.assert_array_equal(np.asarray(core.weight_leaf(fixed, "fc")),
+                                  np.asarray(w))
+
+
+def test_single_filter_conv_repairs_bitwise():
+    """An entire corrupted conv filter is one row of the (M, Ch*R*R)
+    block: dc1 across the row is the per-position damage."""
+    w = _w(1, (6, 3, 3, 3))
+    noise = jax.random.normal(jax.random.PRNGKey(9), (3, 3, 3)) * 7.0
+    bad_params = {"conv": {"w": w.at[2].add(noise)}}
+    plan = core.ProtectionPlan(
+        entries={"conv": core.conv_entry("conv", w, PCFG)})
+    ok, bad = audit_weights_against_plan(bad_params, plan)
+    assert not ok
+    fixed, repaired = repair_weights_against_plan(bad_params, plan, bad)
+    assert repaired == ["conv"]
+    np.testing.assert_array_equal(
+        np.asarray(core.weight_leaf(fixed, "conv")), np.asarray(w))
+
+
+def test_multiblock_damage_escalates():
+    w = _w()
+    params, plan = _matmul_plan(w)
+    # distinct chunk blocks (col_chunk=16: columns 0 and 20)
+    two_blocks = {"fc": {"w": w.at[0, 0].add(977.0).at[5, 20].add(55.0)}}
+    # same block, distinct rows AND columns (cancellation-proof case)
+    two_rc = {"fc": {"w": w.at[0, 0].add(977.0).at[1, 1].add(55.0)}}
+    for bad_params in (two_blocks, two_rc):
+        ok, bad = audit_weights_against_plan(bad_params, plan)
+        assert not ok
+        out, repaired = repair_weights_against_plan(bad_params, plan, bad)
+        assert repaired is None
+        assert out is bad_params          # untouched on escalate
+
+
+def test_stacked_scanned_stage_repairs_in_place():
+    """Scanned-stage weights carry a leading reps axis; locator sums
+    match, and the single-damaged-block gate is global across slices."""
+    w = _w(2, (3, 8, 32))
+    wlc = core.stacked_weight_locators_matmul(w, 16)
+    tol = float(WR.locator_tol(wlc, WR.HOST_RTOL, xp=np))
+    bad = np.asarray(w).copy()
+    bad[1, 4, 20] += 977.0
+    fixed, verdict = WR.repair_stacked_matmul_weight(bad, wlc, tol, xp=np)
+    assert int(verdict) == WR.REPAIRED
+    np.testing.assert_array_equal(fixed.astype(np.float32), np.asarray(w))
+    # damage in two repeat slices = two touched blocks: escalate
+    bad2 = np.asarray(w).copy()
+    bad2[0, 0, 0] += 977.0
+    bad2[2, 1, 17] += 55.0
+    _, verdict = WR.repair_stacked_matmul_weight(bad2, wlc, tol, xp=np)
+    assert int(verdict) == WR.ESCALATE
+
+
+# --------------------------------------------------------------------------
+# dtype drift: bf16 and quantized int8 leaves
+# --------------------------------------------------------------------------
+
+def test_bf16_leaf_audits_and_repairs_bitwise():
+    w = _w(3, dtype=jnp.bfloat16)
+    params, plan = _matmul_plan(w)
+    ok, bad = audit_weights_against_plan(params, plan)
+    assert ok and bad == []
+    bad_params = {"fc": {"w": w.at[2, 9].add(jnp.asarray(977.0, w.dtype))}}
+    ok, bad = audit_weights_against_plan(bad_params, plan)
+    assert not ok
+    fixed, repaired = repair_weights_against_plan(bad_params, plan, bad)
+    assert repaired == ["fc"]
+    got = np.asarray(core.weight_leaf(fixed, "fc"))
+    assert got.dtype == np.asarray(w).dtype
+    np.testing.assert_array_equal(got, np.asarray(w))
+
+
+def test_int8_quantized_leaf_repairs_exactly():
+    """The compression-composition contract: a plan built over int8 codes
+    has exact f64 locator sums, so a corrupted code is restored EXACTLY
+    and the dequantized serving weights are untouched."""
+    q, scale = quantize_weight(_w(4))
+    params, plan = _matmul_plan(q)
+    ok, _ = audit_weights_against_plan(params, plan)
+    assert ok
+    bad_params = {"fc": {"w": q.at[1, 3].add(jnp.asarray(50, q.dtype))}}
+    ok, bad = audit_weights_against_plan(bad_params, plan)
+    assert not ok
+    fixed, repaired = repair_weights_against_plan(bad_params, plan, bad)
+    assert repaired == ["fc"]
+    got = core.weight_leaf(fixed, "fc")
+    assert np.asarray(got).dtype == np.int8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(q))
+    np.testing.assert_array_equal(
+        np.asarray(dequantize_weight(jnp.asarray(np.asarray(got)), scale)),
+        np.asarray(dequantize_weight(q, scale)))
+
+
+# --------------------------------------------------------------------------
+# the device (f32, jit/vmap) path
+# --------------------------------------------------------------------------
+
+def test_device_path_repairs_under_jit():
+    w = _w(5, (16, 32))
+    wlc = core.weight_locators_matmul(w, 16)
+    tol = float(WR.locator_tol(wlc, WR.REPAIR_RTOL, xp=np))
+    fix = jax.jit(lambda ww: WR.repair_matmul_weight(ww, wlc, tol, xp=jnp))
+    fixed, verdict = fix(w.at[3, 20].add(977.0))
+    assert int(verdict) == WR.REPAIRED
+    np.testing.assert_allclose(np.asarray(fixed), np.asarray(w),
+                               rtol=0, atol=2e-2)
+    fixed, verdict = fix(w)
+    assert int(verdict) == WR.CLEAN
+    np.testing.assert_array_equal(np.asarray(fixed), np.asarray(w))
+    _, verdict = fix(w.at[0, 0].add(977.0).at[1, 1].add(55.0))
+    assert int(verdict) == WR.ESCALATE
+
+
+# --------------------------------------------------------------------------
+# audit-side satellites: falsy-zero scales + missing trusted keys
+# --------------------------------------------------------------------------
+
+def test_all_zero_fingerprint_is_a_scale_not_a_missing_one():
+    """w_asum == 0.0 (all-zero leaf) must not fall back to the signed
+    sum: a +d/-d cancellation pattern keeps the signed sum at 0 and only
+    the abs-sum drift catches it."""
+    e = core.matmul_entry("z", cfg=PCFG)        # policy-only: no wck
+    e.w_shape, e.w_dtype = (4, 4), "float32"
+    e.w_sum, e.w_asum = 0.0, 0.0
+    plan = core.ProtectionPlan(entries={"z": e})
+    plan.validate({"z": {"w": jnp.zeros((4, 4))}})
+    cancel = jnp.zeros((4, 4)).at[0, 0].set(0.5).at[1, 1].set(-0.5)
+    with pytest.raises(PlanStaleError, match="content changed"):
+        plan.validate({"z": {"w": cancel}})
+    # the serving audit's fingerprint fallback flags the signed drift too
+    ok, bad = audit_weights_against_plan(
+        {"z": {"w": jnp.zeros((4, 4)).at[0, 0].set(1e-3)}}, plan)
+    assert not ok and any("fingerprint" in b for b in bad)
+
+
+def test_audit_weights_missing_trusted_key_reported_not_raised():
+    params = {"a": {"w": jnp.ones((2, 2))}}
+    trusted = weight_checksums(params)
+    trusted["ghost/w"] = np.asarray(1.0, np.float32)
+    ok, bad = audit_weights(params, trusted)
+    assert not ok and "ghost/w" in bad
