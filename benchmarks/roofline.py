@@ -10,6 +10,12 @@ roofline terms per (arch x shape x mesh) against TPU v5e constants.
 cost_analysis is per-device under SPMD, so terms are per-chip seconds.
 MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) gives the useful-compute
 ratio; the dominant term is the bottleneck SSPerf iterates on.
+
+Host-calibration mode (`measure_peaks()` / `python -m
+benchmarks.roofline --calibrate`) measures *this machine's* sustained
+GEMM FLOP/s and triad bandwidth instead of trusting the v5e constants,
+caches them per host, and is what `core.cost_model.MeasuredCostModel`
+(and therefore `build_plan(cost_model=...)`) classifies shapes against.
 """
 from __future__ import annotations
 
@@ -22,6 +28,15 @@ PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip
 ICI_BW = 50e9                # bytes/s/link
 DCN_BW = 25e9                # cross-pod
+
+
+def measure_peaks(cache_path: Optional[str] = None, refresh: bool = False):
+    """Measure (or load the cached) sustained peak FLOP/s + bandwidth of
+    the host this process runs on - the calibration the guided plan
+    compiler uses in place of the v5e constants above. Delegates to
+    core.cost_model so the core package never imports benchmarks."""
+    from repro.core.cost_model import measure_peaks as _measure
+    return _measure(cache_path=cache_path, refresh=refresh)
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                        "dryrun")
@@ -126,4 +141,8 @@ def run(art_dir: str = ART_DIR, markdown_out: Optional[str] = None):
 
 if __name__ == "__main__":
     import sys
-    run(markdown_out=sys.argv[1] if len(sys.argv) > 1 else None)
+    if "--calibrate" in sys.argv:
+        peaks = measure_peaks(refresh="--refresh" in sys.argv)
+        print(json.dumps(peaks.doc(), indent=2))
+    else:
+        run(markdown_out=sys.argv[1] if len(sys.argv) > 1 else None)

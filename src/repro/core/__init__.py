@@ -1,10 +1,12 @@
 """ABFT core: the paper's contribution (checksum schemes + multischeme
 workflow) for convolution and its exact block-level generalisation to
 matmul, plus the offline-compiled model-level ProtectionPlan API."""
-from . import checksums, injection, plan, policy, schemes, thresholds
-from . import weight_repair
+from . import checksums, cost_model, injection, plan, policy, schemes
+from . import thresholds, weight_repair
 from .checksums import (WeightLocators, weight_locators_conv,
                         weight_locators_matmul)
+from .cost_model import (HostPeaks, MeasuredCostModel, cost_model_doc,
+                         measure_peaks)
 from .protected import (WeightChecksums, abft_matmul_vjp, pick_chunk,
                         protect_matmul_output, protected_conv,
                         protected_grouped_matmul, protected_matmul,
@@ -30,7 +32,9 @@ from .types import (CHECKSUM_REFRESH, CLC, COC, DEFAULT_CONFIG, FC, NONE, RC,
 from .workflow import ProtectedModel
 
 __all__ = [
-    "checksums", "injection", "plan", "policy", "schemes", "thresholds",
+    "checksums", "cost_model", "injection", "plan", "policy", "schemes",
+    "thresholds",
+    "HostPeaks", "MeasuredCostModel", "cost_model_doc", "measure_peaks",
     "weight_repair", "WeightLocators", "weight_locators_conv",
     "weight_locators_matmul", "stacked_weight_locators_matmul",
     "apply_w_view_inv", "W_REPAIR",

@@ -145,6 +145,18 @@ class PlanEntry:
     stack: int = 0
     # Named derivation of the GEMM weight from the param leaf (W_VIEWS).
     w_view: Optional[str] = None
+    # Deferred-workflow membership of this site ("per_layer" | "deferred" |
+    # None). Under ProtectedModel(correction="deferred"), sites marked
+    # "per_layer" keep their immediate in-graph correction ladder while
+    # the rest ride the detect-only carry into the single model-level
+    # cond - the roofline compiler marks expensive compute-bound sites
+    # per_layer (their detection cost is hidden under the op, and an
+    # immediate fix avoids rerunning them in the corrective branch).
+    # None means "deferred" (the pre-roofline behaviour, so old plan
+    # files load unchanged). Only direct-path sites may be per_layer:
+    # sites inside a lax.scan merge their carries into the stage carry,
+    # which cannot mix FaultReports with DetectEvidence.
+    execution: Optional[str] = None
 
     def check_weight(self, w) -> None:
         """Trace-time staleness check against the weight actually used.
@@ -195,10 +207,22 @@ def conv_entry(name: str, w=None, cfg: ProtectConfig = DEFAULT_CONFIG,
 def grouped_matmul_entry(name: str, w=None,
                          cfg: ProtectConfig = DEFAULT_CONFIG) -> PlanEntry:
     """Entry for expert-batched O[g] = D[g] @ W[g] (per-group checksums are
-    derived from runtime operands inside the vmapped op)."""
+    derived from runtime operands inside the vmapped op).
+
+    A concrete (E, K, M) expert stack additionally gets per-expert block
+    checksums + locator sums (the stacked matmul encoders, one slice per
+    expert), so the at-rest audit ladder covers expert weights at full
+    block resolution and its in-place repair rung can solve single-block
+    corruption - instead of silently degrading to the w_sum fingerprint.
+    Scanned MoE stacks (4D leaves) and traced weights stay
+    fingerprint-only, as before."""
     e = PlanEntry(name, OpSpec("grouped_matmul"), cfg)
     if w is not None:
         e.w_shape, e.w_dtype = tuple(w.shape), str(w.dtype)
+        if w.ndim == 3 and not isinstance(w, jax.core.Tracer):
+            # same-module helpers, defined below (resolved at call time)
+            e.wck = stacked_weight_checksums_matmul(w, cfg.col_chunk)
+            e.wlc = stacked_weight_locators_matmul(w, cfg.col_chunk)
     return e
 
 
@@ -277,7 +301,8 @@ def protect_op(op: OpSpec, inputs, entry: Optional[PlanEntry] = None,
             raise NotImplementedError(
                 "protect_op: grouped_matmul does not support an external "
                 "`detected` gate (per-group gates would need a vector)")
-        return protected_grouped_matmul(d, w, cfg=use_cfg, mode=mode)
+        return protected_grouped_matmul(d, w, wck=wck, cfg=use_cfg,
+                                        mode=mode)
     raise ValueError(f"unknown op kind {op.kind!r}")
 
 
@@ -440,6 +465,15 @@ def protect_site(name: str, inputs, *, entry: Optional[PlanEntry] = None,
         use_cfg = cfg if cfg is not None \
             else DEFAULT_CONFIG.replace(enabled=False)
     mode = ambient_mode()
+    if (mode == "detect_only" and entry is not None
+            and entry.execution == "per_layer" and not entry.stack):
+        # mixed deferred membership: a per_layer site keeps its immediate
+        # in-graph ladder even inside the deferred workflow's detect pass
+        # (it returns a FaultReport carry; ProtectedModel folds it into
+        # the model report without routing it through the model cond).
+        # Stacked sites never qualify - their carries merge through the
+        # scan, which cannot mix report types.
+        mode = None
     detected = _carried_flag(current_path(name)) if mode == "correct" \
         else None
     if op is None:
@@ -589,7 +623,8 @@ class ProtectionPlan:
                    "w_shape": list(e.w_shape) if e.w_shape else None,
                    "w_dtype": e.w_dtype, "w_sum": e.w_sum,
                    "w_asum": e.w_asum, "stack": e.stack,
-                   "w_view": e.w_view, "wck": None, "wlc": None}
+                   "w_view": e.w_view, "execution": e.execution,
+                   "wck": None, "wlc": None}
             if isinstance(e.wck, WeightChecksums):
                 doc["wck"] = {"kind": "matmul",
                               "col_chunk": int(e.wck.col_chunk)}
@@ -647,7 +682,7 @@ class ProtectionPlan:
                 w_shape=tuple(doc["w_shape"]) if doc["w_shape"] else None,
                 w_dtype=doc["w_dtype"], w_sum=doc.get("w_sum"),
                 w_asum=doc.get("w_asum"), stack=doc.get("stack", 0),
-                w_view=doc.get("w_view"))
+                w_view=doc.get("w_view"), execution=doc.get("execution"))
         return cls(entries=entries, meta=raw.get("meta", {}))
 
     # -- sharding ----------------------------------------------------------
@@ -806,8 +841,8 @@ def _cnn_spec(arch_cfg, batch: int) -> ProtectionSpec:
                         shape=OpShape(n=batch,
                                       m=getattr(arch_cfg, "num_classes",
                                                 1000), ch=ch)))
-    meta = {"arch": getattr(arch_cfg, "name", "?"), "batch": batch,
-            "img": arch_cfg.img, "in_ch": arch_cfg.in_ch}
+    meta = {"arch": getattr(arch_cfg, "name", "?"), "family": "cnn",
+            "batch": batch, "img": arch_cfg.img, "in_ch": arch_cfg.in_ch}
     return ProtectionSpec(sites=sites, base=base, meta=meta)
 
 
@@ -964,11 +999,35 @@ def build_plan(params, arch_cfg, cost_model: Optional[CostModel] = None,
     single-launch fused detect path (chunk == tile). Profiling is
     memoized per distinct (n, k, m) / conv shape, so the dozens of
     identically-shaped per-block sites pay one timing each.
+
+    A measured cost model (`cost_model=MeasuredCostModel.from_host()`,
+    core.cost_model) upgrades every one of those decisions from the
+    abstract alpha/beta units to this host's calibrated roofline:
+    * RC/ClC enablement prices schemes in real seconds, and extends from
+      conv sites to every shaped matmul site;
+    * detection chunking is sized to keep the chunked detect pass
+      bandwidth-bound (`detect_chunk`), instead of the global default;
+    * the profile_kernels candidate set is pruned to shapes near the
+      ridge point (`should_profile`) - far-from-ridge shapes skip the
+      timing entirely and record a skip reason;
+    * direct-path CNN sites get a per-entry `execution` membership:
+      compute-bound sites keep their immediate in-graph ladder
+      ("per_layer") while bandwidth-bound ones ride the deferred carry -
+      ProtectedModel(correction="deferred") honors the mix;
+    * every verdict persists in `meta["roofline"]` (intensity, bound,
+      predicted scheme costs, measured kernel timings when profiled), so
+      a loaded plan is auditable and re-derivable.
     """
     spec = protection_spec(arch_cfg, batch=batch, seq=seq)
     base = spec.base
+    measured = hasattr(cost_model, "classify")     # MeasuredCostModel
+    # mixed execution membership only applies to direct-path model walks
+    # (the CNN family): scanned/stacked transformer sites merge their
+    # carries through the scan, which cannot mix report types
+    direct_family = spec.meta.get("family") == "cnn"
     entries: Dict[str, PlanEntry] = {}
     kprof: Dict[str, dict] = {}
+    roofline: Dict[str, dict] = {}
     prof_cache: Dict[tuple, object] = {}
     for site in spec.sites:
         w = None
@@ -987,8 +1046,35 @@ def build_plan(params, arch_cfg, cost_model: Optional[CostModel] = None,
         if site.op.kind == "conv" and site.shape is not None:
             rc, clc = decide_rc_clc(site.shape, cost_model)
             cfg = cfg.replace(rc_enabled=rc, clc_enabled=clc)
+        cls = None
+        execution = None
+        if measured and site.shape is not None:
+            cls = cost_model.classify(site.shape)
+            if site.op.kind == "matmul":
+                # rung selection in real seconds for GEMM sites too (the
+                # analytic default only ever decided conv sites)
+                rc, clc = decide_rc_clc(site.shape, cost_model)
+                cfg = cfg.replace(rc_enabled=rc, clc_enabled=clc)
+            chunk = cost_model.detect_chunk(cfg.col_chunk)
+            cfg = cfg.replace(row_chunk=chunk, col_chunk=chunk)
+            if direct_family and not site.stack:
+                execution = ("per_layer" if cls["bound"] == "compute"
+                             else "deferred")
         if profile_kernels and cfg.enabled and site.shape is not None:
             s = site.shape
+            if measured and not cost_model.should_profile(s):
+                kprof[site.path] = {
+                    "use_fused": False, "tiles": None, "plain_us": None,
+                    "fused_us": None,
+                    "skipped": "roofline prune: intensity "
+                               f"{cls['intensity']:.2f} outside the "
+                               "profile window around ridge "
+                               f"{cls['ridge']:.2f}"}
+                entries[site.path] = _compile_entry(site, w, cfg, execution)
+                if cls is not None:
+                    roofline[site.path] = _roofline_doc(cls, execution,
+                                                        kprof.get(site.path))
+                continue
             if site.op.kind == "conv":
                 ckey = ("conv", s.n, s.m, s.h)
                 prof = prof_cache.get(ckey)
@@ -1011,10 +1097,16 @@ def build_plan(params, arch_cfg, cost_model: Optional[CostModel] = None,
                 cfg = cfg.replace(row_chunk=prof.tiles[0],
                                   col_chunk=prof.tiles[1])
             kprof[site.path] = prof.doc()
-        entries[site.path] = _site_entry(site, w, cfg)
+        entries[site.path] = _compile_entry(site, w, cfg, execution)
+        if cls is not None:
+            roofline[site.path] = _roofline_doc(cls, execution,
+                                                kprof.get(site.path))
     model = cost_model or CostModel()
     meta = dict(spec.meta)
-    meta["cost_model"] = {"alpha": model.alpha, "beta": model.beta}
+    from .cost_model import cost_model_doc
+    meta["cost_model"] = cost_model_doc(model)
+    if measured:
+        meta["roofline"] = roofline
     if profile_kernels:
         meta["kernel_profile"] = kprof
         if not kprof and entries:
@@ -1026,6 +1118,29 @@ def build_plan(params, arch_cfg, cost_model: Optional[CostModel] = None,
                 "in this spec (every site lacks an OpShape); plan built "
                 "without kernel pinning")
     return ProtectionPlan(entries=entries, meta=meta)
+
+
+def _compile_entry(site: OpSite, w, cfg: ProtectConfig,
+                   execution: Optional[str]) -> PlanEntry:
+    e = _site_entry(site, w, cfg)
+    e.execution = execution
+    return e
+
+
+def _roofline_doc(cls: dict, execution: Optional[str],
+                  prof_doc: Optional[dict]) -> dict:
+    """One site's persisted roofline verdict: the classification inputs,
+    the membership decision it produced, and - when the site was profiled
+    - the measured plain/fused timings next to the prediction."""
+    doc = {"intensity": cls["intensity"], "ridge": cls["ridge"],
+           "bound": cls["bound"], "predicted_us": dict(cls["predicted_us"]),
+           "execution": execution}
+    if prof_doc is not None:
+        doc["measured_us"] = {"plain": prof_doc.get("plain_us"),
+                              "fused": prof_doc.get("fused_us")}
+        if prof_doc.get("skipped"):
+            doc["profile_skipped"] = prof_doc["skipped"]
+    return doc
 
 
 def force_fused_matmul(plan: ProtectionPlan,

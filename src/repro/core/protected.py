@@ -735,22 +735,34 @@ def protected_conv(
 def protected_grouped_matmul(
     d: jnp.ndarray,   # (G, N, K) per-group inputs
     w: jnp.ndarray,   # (G, K, M) per-group weights (experts)
+    wck: Optional[WeightChecksums] = None,   # stacked: leading G axis
     cfg: T.ProtectConfig = T.DEFAULT_CONFIG,
     mode: Optional[str] = None,
 ) -> Tuple[jnp.ndarray, T.FaultReport]:
     """Expert-batched protected GEMM: each group carries its own checksums
     (the grouped-convolution extension: groups never mix, so per-group
-    invariants are exact). In detect-only mode the evidence carry is the
-    max over groups (any flagged expert flags the op)."""
+    invariants are exact). `wck` carries the plan's offline per-expert
+    checksums with a leading group axis (stacked_weight_checksums_matmul);
+    without it each group re-encodes from its runtime weight slice. In
+    detect-only mode the evidence carry is the max over groups (any
+    flagged expert flags the op)."""
     if cfg is None or not cfg.enabled:
         o = jnp.einsum("gnk,gkm->gnm", d, w,
                        preferred_element_type=F32).astype(d.dtype)
         return _clean_result(o, mode)
 
-    def one(dg, wg):
-        return protected_matmul(dg, wg, cfg=cfg, mode=mode)
+    if wck is not None and wck.cw1.shape[0] == w.shape[0]:
+        def one_ck(dg, wg, c1, c2):
+            return protected_matmul(
+                dg, wg, wck=WeightChecksums(c1, c2, wck.col_chunk),
+                cfg=cfg, mode=mode)
 
-    o, reps = jax.vmap(one)(d, w)
+        o, reps = jax.vmap(one_ck)(d, w, wck.cw1, wck.cw2)
+    else:
+        def one(dg, wg):
+            return protected_matmul(dg, wg, cfg=cfg, mode=mode)
+
+        o, reps = jax.vmap(one)(d, w)
     if mode == "detect_only":
         return o, T.DetectEvidence(jnp.max(reps.flag), jnp.max(reps.score))
     rep = T.FaultReport(jnp.max(reps.detected), jnp.max(reps.corrected_by),

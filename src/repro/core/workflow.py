@@ -139,13 +139,25 @@ class ProtectedModel:
         with plan_scope(self.plan, mode="detect_only"):
             out_d, ev = self.apply_fn(params, *args, **kwargs)
         evmap = self._layer_map(ev, "detect-only")
-        bad = [n for n, e in evmap.items()
-               if not isinstance(e, T.DetectEvidence)]
-        if bad:
+        # mixed execution membership: sites whose plan entry is marked
+        # execution="per_layer" ran their immediate in-graph ladder during
+        # the detect pass and carry a full FaultReport - they are already
+        # corrected in out_d and stay out of the model-level cond. Every
+        # other carry must be DetectEvidence.
+        inline: dict = {}
+        for n, e in evmap.items():
+            if isinstance(e, T.DetectEvidence):
+                continue
+            entry = self.plan.get(n) if self.plan is not None else None
+            if (isinstance(e, T.FaultReport) and entry is not None
+                    and entry.execution == "per_layer"):
+                inline[n] = e
+                continue
             raise TypeError(
                 "ProtectedModel deferred mode: the detect-only pass "
-                f"returned non-DetectEvidence carries for {sorted(bad)}; "
-                "some protected op bypassed the ambient execution mode "
+                f"returned a non-DetectEvidence carry for {n!r} whose "
+                "plan entry is not marked execution='per_layer'; some "
+                "protected op bypassed the ambient execution mode "
                 "(e.g. a direct protected_matmul call) - route it through "
                 "protect_site / apply_dense so the ladder is not traced "
                 "on the hot path")
@@ -154,13 +166,24 @@ class ProtectedModel:
             rep0 = T.ModelReport({}, mode="deferred")
             return ((out_d, rep0, out_d) if with_detect_out
                     else (out_d, rep0))
-        flags = jnp.stack([evmap[n].flag for n in names])
+        flags = jnp.stack([evmap[n].detected if n in inline
+                           else evmap[n].flag for n in names])
+        # clean-branch verdict vectors: inline members keep the ladder
+        # verdicts they already earned; deferred members are zeros
+        z = jnp.zeros((), jnp.int32)
+        base_by = jnp.stack([evmap[n].corrected_by if n in inline else z
+                             for n in names])
+        base_resid = jnp.stack([evmap[n].residual if n in inline else z
+                                for n in names])
+        deferred_flags = [flags[i] for i, n in enumerate(names)
+                          if n not in inline]
 
         def _corrective():
             # the rerun trusts the detect-pass flags at every path that
             # carried one (the ladder re-verifies against fresh checksums
-            # anyway); scan-merged paths re-detect inside the branch
-            carried = {n: evmap[n].flag > 0 for n in names}
+            # anyway); scan-merged paths re-detect inside the branch, and
+            # inline members rerun their (deterministic) immediate ladder
+            carried = {n: flags[i] > 0 for i, n in enumerate(names)}
             with plan_scope(self.plan, mode="correct", detected=carried):
                 out_c, rep = self.apply_fn(params, *args, **kwargs)
             repmap = {n: T.as_fault_report(r) for n, r in
@@ -175,8 +198,15 @@ class ProtectedModel:
             resid = jnp.stack([repmap[n].residual for n in names])
             return out_c, by, resid
 
-        out, by, resid = run_deferred(jnp.max(flags) > 0, out_d,
-                                      _corrective, len(names))
+        if deferred_flags:
+            any_flag = jnp.max(jnp.stack(deferred_flags)) > 0
+            out, by, resid = run_deferred(any_flag, out_d, _corrective,
+                                          len(names), base_by=base_by,
+                                          base_resid=base_resid)
+        else:
+            # every member is per_layer: out_d is already fully corrected
+            # and there is nothing for a model-level cond to gate
+            out, by, resid = out_d, base_by, base_resid
         rep = T.ModelReport(
             {n: T.FaultReport(flags[i], by[i], resid[i])
              for i, n in enumerate(names)}, mode="deferred")
@@ -187,7 +217,8 @@ class ProtectedModel:
         return (out, rep, out_d) if with_detect_out else (out, rep)
 
 
-def run_deferred(any_flag, clean_out, correct_fn: Callable, n_layers: int):
+def run_deferred(any_flag, clean_out, correct_fn: Callable, n_layers: int,
+                 base_by=None, base_resid=None):
     """The multischeme workflow lifted to model granularity (the paper's
     Fig. 7 fuse-then-defer discipline, in-graph): the forward ran every
     op detect-only, and ONE model-level cond reruns the protected forward
@@ -200,11 +231,17 @@ def run_deferred(any_flag, clean_out, correct_fn: Callable, n_layers: int):
     path therefore carries exactly one cond instead of one per layer -
     the per-layer cond carry (~0.1 ms/layer on CPU) that dominates
     reduced-scale error-free overhead.
-    """
+
+    `base_by`/`base_resid` are the no-rerun branch's verdict vectors
+    (default zeros): under mixed execution membership, per_layer members
+    already corrected inside the detect pass, so their ladder verdicts
+    ride through the clean branch instead of being zeroed."""
 
     def _clean(_):
         z = jnp.zeros((n_layers,), jnp.int32)
-        return clean_out, z, z
+        return (clean_out,
+                z if base_by is None else base_by,
+                z if base_resid is None else base_resid)
 
     def _correct(_):
         return correct_fn()

@@ -124,11 +124,13 @@ def audit_weights_against_plan(params, plan, rtol: float = 1e-5
                 bad.append(f"{name}: weight-sum fingerprint diverged "
                            f"({got:.6g} vs plan {e.w_sum:.6g})")
             continue
-        if e.op.kind == "matmul":
-            # scanned-stage entries re-encode through the same stacked
-            # helper build_plan used, so the recipes cannot drift
+        if e.op.kind in ("matmul", "grouped_matmul"):
+            # scanned-stage and per-expert grouped entries re-encode
+            # through the same stacked helper build_plan used, so the
+            # recipes cannot drift
+            stacked = e.stack or e.op.kind == "grouped_matmul"
             fresh = (stacked_weight_checksums_matmul(w, e.wck.col_chunk)
-                     if e.stack
+                     if stacked
                      else weight_checksums_matmul(w, e.wck.col_chunk))
             pairs = ((np.asarray(e.wck.cw1), np.asarray(fresh.cw1)),
                      (np.asarray(e.wck.cw2), np.asarray(fresh.cw2)))
@@ -218,6 +220,11 @@ def repair_weights_against_plan(params, plan, bad: List[str],
             fix = (WR.repair_stacked_matmul_weight if e.stack
                    else WR.repair_matmul_weight)
             fixed, verdict = fix(w, e.wlc, tol, xp=np)
+        elif e.op.kind == "grouped_matmul":
+            # per-expert stacks repair like scanned stacks: the locator
+            # sums carry one (K, M) block grid per leading-axis slice
+            fixed, verdict = WR.repair_stacked_matmul_weight(w, e.wlc, tol,
+                                                             xp=np)
         elif e.op.kind == "conv":
             fixed, verdict = WR.repair_conv_weight(w, e.wlc, tol, xp=np)
         else:

@@ -523,3 +523,109 @@ def test_deferred_rejects_unknown_mode(cnn_model):
         core.protect_op(core.OpSpec("matmul"),
                         (jnp.zeros((4, 4)), jnp.zeros((4, 4))),
                         mode="bogus")
+
+
+# --------------------------------------------------------------------------
+# mixed execution membership (roofline-guided plans)
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def guided_cnn_model():
+    """AlexNet under a synthetic calibration whose ridge point lands in
+    the middle of the conv layers' intensity spread, so the guided plan
+    genuinely mixes per_layer and deferred membership - host-independent,
+    unlike MeasuredCostModel.from_host()."""
+    from repro.core.cost_model import shape_bytes, shape_flops
+    cfg = cnn.alexnet(SCALE_CNN)
+    cfg = cfg.__class__(**{**cfg.__dict__, "img": IMG_CNN})
+    params = cnn.init_cnn(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, IMG_CNN, IMG_CNN))
+    spec = core.protection_spec(cfg, batch=2)
+    conv_int = sorted(shape_flops(s.shape) / shape_bytes(s.shape)
+                      for s in spec.sites
+                      if s.shape is not None and s.op.kind == "conv")
+    assert conv_int[0] < conv_int[-1]
+    ridge = (conv_int[0] + conv_int[-1]) / 2.0
+    mcm = core.MeasuredCostModel(peak_flops=ridge * 1e9, hbm_bw=1e9)
+    plan = core.build_plan(params, cfg, batch=2, cost_model=mcm)
+    return cfg, params, x, plan
+
+
+def test_mixed_plan_has_both_memberships(guided_cnn_model):
+    cfg, params, x, plan = guided_cnn_model
+    inline = [n for n in plan.names()
+              if plan[n].execution == "per_layer"]
+    deferred = [n for n in plan.names()
+                if plan[n].execution != "per_layer"]
+    assert inline and deferred
+    # membership matches the recorded roofline verdicts
+    for n in plan.names():
+        want = ("per_layer"
+                if plan.meta["roofline"][n]["bound"] == "compute"
+                else "deferred")
+        assert plan[n].execution == want, n
+
+
+def test_mixed_clean_path_bitwise_identical_to_unprotected(
+        guided_cnn_model):
+    """On the clean path the mixed deferred forward must be
+    bitwise-identical to the unprotected forward: inline members' ladders
+    sit inside untaken conds and deferred members never rerun."""
+    cfg, params, x, plan = guided_cnn_model
+    off = cfg.__class__(**{**cfg.__dict__, "abft": False})
+    l_off = jax.jit(lambda p, x: cnn.forward_cnn(p, x, off)[0])(params, x)
+    l_mix, rep = jax.jit(
+        lambda p, x: cnn.forward_cnn(p, x, cfg, plan=plan,
+                                     correction="deferred"))(params, x)
+    np.testing.assert_array_equal(np.asarray(l_off), np.asarray(l_mix))
+    assert int(rep.detected) == 0 and int(rep.residual) == 0
+    assert set(rep.by_layer) == set(plan.names())
+
+
+def test_mixed_cond_count_is_inline_plus_one(guided_cnn_model):
+    """The mixed forward carries one top-level cond per inline member
+    (their immediate ladders) plus exactly ONE model-level cond for the
+    deferred members - the structural contract of mixed membership."""
+    cfg, params, x, plan = guided_cnn_model
+    n_inline = sum(1 for n in plan.names()
+                   if plan[n].execution == "per_layer")
+    jaxpr = jax.make_jaxpr(
+        lambda p, x: cnn.forward_cnn(p, x, cfg, plan=plan,
+                                     correction="deferred")[0])(params, x)
+    conds = [e for e in jaxpr.jaxpr.eqns if e.primitive.name == "cond"]
+    assert len(conds) == n_inline + 1
+
+
+@pytest.mark.parametrize("membership", ["per_layer", "deferred"])
+def test_mixed_injection_corrects_in_both_memberships(
+        guided_cnn_model, membership):
+    """A fault at an inline conv corrects through its immediate ladder; a
+    fault at a deferred conv corrects through the model-level rerun -
+    both report detected=1, residual=0 and leave every other layer
+    clean."""
+    cfg, params, x, plan = guided_cnn_model
+    convs = [n for n in plan.names() if n.startswith("conv")]
+    names = [n for n in convs if (plan[n].execution == "per_layer")
+             == (membership == "per_layer")]
+    assert names, f"fixture produced no {membership} conv"
+    layer = int(names[0][len("conv"):])
+    _, o_clean = cnn.conv_output_at(params, x, cfg, layer)
+    model = inj.FAULT_MODELS["burst_row"]
+    spec = model.plan(jax.random.PRNGKey(layer + 7), o_clean.shape[0],
+                      o_clean.shape[1],
+                      o_clean.shape[2] * o_clean.shape[3], 64)
+    o_bad = inj.inject(o_clean, spec, model)
+    l_mix, rep = cnn.forward_cnn(params, x, cfg, plan=plan,
+                                 inject_layer=layer, inject_o=o_bad,
+                                 correction="deferred")
+    assert int(rep.by_layer[f"conv{layer}"].detected) == 1
+    assert int(rep.by_layer[f"conv{layer}"].corrected_by) > 0
+    assert int(rep.residual) == 0
+    for n in rep.by_layer:
+        if n != f"conv{layer}":
+            assert int(rep.by_layer[n].detected) == 0, n
+    # corrected logits track the clean forward to correction precision
+    l_clean, _ = cnn.forward_cnn(params, x, cfg, plan=plan)
+    scale = float(np.max(np.abs(np.asarray(l_clean)))) + 1.0
+    np.testing.assert_allclose(np.asarray(l_mix), np.asarray(l_clean),
+                               atol=1e-4 * scale)

@@ -90,6 +90,57 @@ def test_plan_roundtrip_checksums_bitwise_equal(tmp_path):
         np.testing.assert_array_equal(np.asarray(l.wck[1]), np.asarray(f2))
 
 
+def test_guided_plan_roundtrip_execution_and_roofline(tmp_path):
+    """Roofline-guided plans persist their per-entry execution membership
+    and the meta.roofline / meta.cost_model decision record exactly
+    through JSON - a loaded plan replays the same mixed-membership
+    forward the builder decided."""
+    import json
+    cfg, params, _ = _model()
+    mcm = core.MeasuredCostModel(peak_flops=2e11, hbm_bw=2e10)
+    plan = core.build_plan(params, cfg, batch=2, cost_model=mcm)
+    assert plan.meta["cost_model"]["class"] == "MeasuredCostModel"
+    roof = plan.meta["roofline"]
+    assert set(roof) == set(plan.names())
+    for name in plan.names():
+        e = plan[name]
+        assert e.execution in ("per_layer", "deferred")
+        assert roof[name]["execution"] == e.execution
+        assert roof[name]["bound"] in ("compute", "bandwidth")
+        assert roof[name]["intensity"] > 0
+
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    loaded = core.ProtectionPlan.load(path)
+    loaded.validate(params)
+    assert loaded.meta["roofline"] == plan.meta["roofline"]
+    assert loaded.meta["cost_model"] == plan.meta["cost_model"]
+    for name in plan.names():
+        assert loaded[name].execution == plan[name].execution
+
+    # legacy plans (written before the execution field existed) load with
+    # execution=None, which means all-deferred - unchanged semantics
+    # (rewrite the json in place so the npz sidecar still pairs up)
+    with open(path) as f:
+        doc = json.load(f)
+    for e in doc["entries"].values():
+        e.pop("execution", None)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    legacy = core.ProtectionPlan.load(path)
+    assert all(legacy[n].execution is None for n in legacy.names())
+
+
+def test_default_plan_has_no_roofline_meta():
+    """The analytic default keeps old behaviour: no execution membership,
+    no meta.roofline - only the cost-model provenance record is new."""
+    cfg, params, _ = _model()
+    plan = core.build_plan(params, cfg, batch=2)
+    assert "roofline" not in plan.meta
+    assert plan.meta["cost_model"]["class"] == "CostModel"
+    assert all(plan[n].execution is None for n in plan.names())
+
+
 def test_stale_plan_rejected(tmp_path):
     cfg, params, _ = _model()
     plan = core.build_plan(params, cfg, batch=2)

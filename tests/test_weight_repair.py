@@ -162,6 +162,35 @@ def test_stacked_scanned_stage_repairs_in_place():
     assert int(verdict) == WR.ESCALATE
 
 
+def test_grouped_expert_stack_audits_and_repairs_in_place(tmp_path):
+    """MoE expert stacks (E, K, M) carry per-expert block checksums and
+    locator sums via grouped_matmul_entry, so the plan audit flags a
+    single corrupted expert block and the repair rung restores it bitwise
+    - instead of degrading to the w_sum fingerprint + full restore."""
+    w = _w(4, (4, 8, 32))
+    params = {"moe": {"experts": {"w": w}}}
+    entry = core.grouped_matmul_entry("moe/experts", w, PCFG)
+    assert entry.wck is not None and entry.wlc is not None
+    assert entry.wck.cw1.shape[0] == 4          # one slice per expert
+    plan = core.ProtectionPlan(entries={"moe/experts": entry})
+    # the per-expert side-info survives the save/load round-trip
+    plan.save(str(tmp_path / "plan.json"))
+    plan = core.ProtectionPlan.load(str(tmp_path / "plan.json"))
+    ok, bad = audit_weights_against_plan(params, plan)
+    assert ok and bad == []
+    corrupted = np.asarray(w).copy()
+    corrupted[2, 5, 21] += 977.0
+    bad_params = {"moe": {"experts": {"w": jnp.asarray(corrupted)}}}
+    ok, bad = audit_weights_against_plan(bad_params, plan)
+    assert not ok and bad and bad[0].startswith("moe/experts")
+    fixed, repaired = repair_weights_against_plan(bad_params, plan, bad)
+    assert repaired == ["moe/experts"]
+    got = np.asarray(core.weight_leaf(fixed, "moe/experts"))
+    np.testing.assert_array_equal(got, np.asarray(w))
+    ok, _ = audit_weights_against_plan(fixed, plan)
+    assert ok
+
+
 # --------------------------------------------------------------------------
 # dtype drift: bf16 and quantized int8 leaves
 # --------------------------------------------------------------------------
