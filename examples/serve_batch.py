@@ -1,8 +1,10 @@
-"""Batched serving example: continuous-batching ProtectedSession with
-per-request fault/SLO reports, on any assigned arch (reduced by default).
+"""Batched serving example: the async ServingDriver (bounded admission,
+controller/runner split) with per-request fault/SLO reports, on any
+assigned arch (reduced by default).
 
     PYTHONPATH=src python examples/serve_batch.py --arch mamba2-1.3b-smoke
     PYTHONPATH=src python examples/serve_batch.py --arch yi-9b-smoke
+    PYTHONPATH=src python examples/serve_batch.py --sync   # session loop
 """
 import argparse
 import sys
@@ -18,19 +20,27 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--sync", action="store_true",
+                    help="synchronous ProtectedSession instead of the "
+                         "async driver")
     args = ap.parse_args()
-    toks, stats = serve(args.arch, args.batch, args.prompt_len, args.gen)
+    toks, stats = serve(args.arch, args.batch, args.prompt_len, args.gen,
+                        driver=not args.sync)
     rep = stats["report"]
-    print(f"arch={args.arch} generated={tuple(toks.shape)}")
+    print(f"arch={args.arch} generated={tuple(toks.shape)} "
+          f"mode={'sync' if args.sync else 'driver'}")
     print(f"prefill {stats['prefill_s']*1e3:.1f} ms; "
           f"decode {stats['tok_per_s']:.1f} tok/s; "
           f"ttft p50/p95 {rep['ttft_p50_s']*1e3:.1f}/"
           f"{rep['ttft_p95_s']*1e3:.1f} ms; "
           f"faults detected: {stats['faults_detected']}")
     for r in rep["requests"]:
+        qd = r["queue_delay_s"]
         print(f"  req {r['id']} slot={r['slot']} "
               f"prompt={r['prompt_len']} gen={r['tokens_generated']} "
-              f"finish={r['finish_reason']} det={r['faults_detected']} "
+              f"finish={r['finish_reason']} "
+              f"queue={qd * 1e3 if qd is not None else 0:.1f}ms "
+              f"det={r['faults_detected']} "
               f"corr={r['corrections_applied']}")
 
 

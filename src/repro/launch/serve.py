@@ -1,10 +1,13 @@
-"""Batched serving driver - a thin shim over repro.serving.
+"""Batched serving entry point - a thin shim over repro.serving.
 
 The fixed-batch prefill+decode loop this module used to implement lives
-in `repro.serving.ProtectedSession` now (continuous batching, deferred
-ProtectedModel protection, per-request fault/SLO accounting); serve()
+in `repro.serving` now: `serve()` drives the async `ServingDriver`
+(bounded admission + controller/runner split, the deployment shape) and
 keeps the legacy surface (tokens array + summary stats) for the drivers
-and tests, plus the full per-request report under "report".
+and tests, plus the full per-request report under "report". Pass
+``driver=False`` to route through the synchronous `ProtectedSession`
+instead (the single-stream building block - handy when bisecting a
+driver-vs-session behavior difference).
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m-smoke \
       --batch 4 --prompt-len 32 --gen 16
@@ -21,11 +24,11 @@ import numpy as np
 import repro.configs as C
 import repro.core as ft
 from repro.models.transformer import init_params
-from repro.serving import ProtectedSession
+from repro.serving import ProtectedSession, ServingDriver
 
 
 def serve(arch: str, batch: int, prompt_len: int, gen: int, seed: int = 0,
-          audit_every: int = 0):
+          audit_every: int = 0, driver: bool = True):
     cfg = C.get(arch)
     # split: one stream for params, one for prompts (a shared key would
     # correlate the weights with the traffic)
@@ -40,16 +43,28 @@ def serve(arch: str, batch: int, prompt_len: int, gen: int, seed: int = 0,
 
     plan = (ft.build_plan(params, cfg, batch=batch, seq=max_len)
             if cfg.abft else None)
-    sess = ProtectedSession(params, cfg, plan, slots=batch,
-                            max_len=max_len, audit_every=audit_every)
     t0 = time.time()
-    rids = [sess.submit(prompts[i], max_new_tokens=gen)
-            for i in range(batch)]
-    report = sess.run()
+    if driver:
+        d = ServingDriver(params, cfg, plan, slots=batch, max_len=max_len,
+                          audit_every=audit_every,
+                          queue_capacity=max(batch * 4, 8))
+        try:
+            rids = [d.submit(prompts[i], max_new_tokens=gen).rid
+                    for i in range(batch)]
+            report = d.drain()
+            tokens = {r: d.tokens_for(r) for r in rids}
+        finally:
+            d.close()
+    else:
+        sess = ProtectedSession(params, cfg, plan, slots=batch,
+                                max_len=max_len, audit_every=audit_every)
+        rids = [sess.submit(prompts[i], max_new_tokens=gen)
+                for i in range(batch)]
+        report = sess.run()
+        tokens = {r: sess.tokens_for(r) for r in rids}
     wall = time.time() - t0
 
-    tokens_out = np.stack([np.asarray(sess.tokens_for(r), np.int32)
-                           for r in rids])
+    tokens_out = np.stack([np.asarray(tokens[r], np.int32) for r in rids])
     recs = {r["id"]: r for r in report["requests"]}
     # prefill time = admission->first-token spans; decode is the rest of
     # the wall (the session accumulates stats on device - no per-step
@@ -73,8 +88,11 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--sync", action="store_true",
+                    help="use the synchronous ProtectedSession loop")
     args = ap.parse_args()
-    toks, stats = serve(args.arch, args.batch, args.prompt_len, args.gen)
+    toks, stats = serve(args.arch, args.batch, args.prompt_len, args.gen,
+                        driver=not args.sync)
     rep = stats["report"]
     print(f"generated {toks.shape} tokens; "
           f"tok/s={stats['tok_per_s']:.1f} "

@@ -1,9 +1,13 @@
 """Protected continuous-batching serving: slot scheduler + ProtectedSession
 + per-request fault/SLO accounting (the paper's soft-error-safe inference
-pipeline, lifted from a one-shot batch loop to continuous traffic)."""
+pipeline, lifted from a one-shot batch loop to continuous traffic), plus
+the async ServingDriver (controller/runner split: bounded admission with
+backpressure verdicts and deadlines, double-buffered host sync)."""
+from .driver import ServingDriver, SubmitVerdict
 from .scheduler import Request, SlotScheduler, bucket_for
 from .session import ProtectedSession, greedy_reference
 from .stats import RequestRecord, ServingStats
 
 __all__ = ["Request", "SlotScheduler", "bucket_for", "ProtectedSession",
-           "greedy_reference", "RequestRecord", "ServingStats"]
+           "greedy_reference", "RequestRecord", "ServingStats",
+           "ServingDriver", "SubmitVerdict"]

@@ -74,15 +74,26 @@ class SlotScheduler:
         self._next_id = 0
 
     # -- admission ---------------------------------------------------------
-    def submit(self, tokens, max_new_tokens: int,
-               eos_id: Optional[int] = None) -> Optional[Request]:
-        """Enqueue a request; returns it, or None when the prompt cannot
-        fit the session's cache even alone (counted as dropped)."""
+    def make_request(self, tokens, max_new_tokens: int,
+                     eos_id: Optional[int] = None) -> Tuple[Request, bool]:
+        """Validate + allocate a request WITHOUT queueing it (the async
+        driver owns its own bounded queue). Returns (request, ok); ok is
+        False when the prompt cannot fit the session's cache even alone,
+        in which case the request is recorded in `dropped`."""
         tokens = np.asarray(tokens)
         req = Request(self._next_id, tokens, int(max_new_tokens), eos_id)
         self._next_id += 1
         if req.prompt_len < 1 or req.prompt_len >= self.max_len:
             self.dropped.append(req)
+            return req, False
+        return req, True
+
+    def submit(self, tokens, max_new_tokens: int,
+               eos_id: Optional[int] = None) -> Optional[Request]:
+        """Enqueue a request; returns it, or None when the prompt cannot
+        fit the session's cache even alone (counted as dropped)."""
+        req, ok = self.make_request(tokens, max_new_tokens, eos_id)
+        if not ok:
             return None
         self.queue.append(req)
         return req
@@ -101,6 +112,19 @@ class SlotScheduler:
             self.active[slot] = req
             placed.append((slot, req))
         return placed
+
+    def place(self, req: Request) -> Optional[int]:
+        """Claim the lowest free slot for `req` directly (bypassing the
+        FIFO - the async driver pops from its own deadline-aware queue).
+        Returns the slot, or None when every slot is occupied. A slot
+        freed by evict() is claimable in the same scheduler tick - the
+        evict-then-refill edge the continuous-batching refill leans on."""
+        free = self.free_slots()
+        if not free:
+            return None
+        slot = free[0]
+        self.active[slot] = req
+        return slot
 
     def evict(self, slot: int) -> Request:
         return self.active.pop(slot)

@@ -217,16 +217,19 @@ class ProtectedSession:
     def submit(self, tokens, max_new_tokens: int = 16,
                eos_id: Optional[int] = None) -> int:
         """Enqueue one request; returns its id (served on later step()s)."""
+        now = self._now()
         req = self.scheduler.submit(tokens, max_new_tokens, eos_id)
         if req is None:
             req = self.scheduler.dropped[-1]
             rec = self.stats.add(RequestRecord(
                 req.id, req.prompt_len, req.max_new_tokens))
+            rec.submitted_at = now
             rec.finish_reason = "dropped"
             self.stats.counters["dropped"] += 1
             return req.id
-        self.stats.add(RequestRecord(req.id, req.prompt_len,
-                                     req.max_new_tokens))
+        rec = self.stats.add(RequestRecord(req.id, req.prompt_len,
+                                           req.max_new_tokens))
+        rec.submitted_at = now
         return req.id
 
     def tokens_for(self, rid: int) -> List:
@@ -277,50 +280,85 @@ class ProtectedSession:
             return "max_len"
         return None
 
-    def _prefill_into(self, slot: int, req) -> None:
-        rec = self.stats.record(req.id)
-        rec.slot = slot
-        rec.admitted_at = self._now()
+    def _prep_prefill(self, req):
+        """Host-side prefill prep (bucket choice + padded token buffer) -
+        pure, so the async driver runs it at submit time, off the runner's
+        critical path."""
         plen = req.prompt_len
         bucket = self.scheduler.bucket(plen)
         toks = np.zeros((1, bucket) + req.tokens.shape[1:], np.int32)
         toks[0, :plen] = req.tokens
+        return bucket, toks
+
+    def _dispatch_prefill(self, slot: int, req, bucket: int,
+                          buf: np.ndarray):
+        """Device half of one admission: run the bucketed prefill and
+        insert its caches into the slot. Returns the async output dict
+        (next/caches/stats still device-resident)."""
+        rec = self.stats.record(req.id)
+        rec.slot = slot
+        rec.admitted_at = self._now()
         with self._ctx():
-            out = self._prefill(bucket)(self.params, jnp.asarray(toks),
-                                        jnp.asarray(plen - 1, jnp.int32))
+            out = self._prefill(bucket)(
+                self.params, jnp.asarray(buf),
+                jnp.asarray(req.prompt_len - 1, jnp.int32))
             self._caches = self._insert_fn(self._caches, out["caches"],
                                            jnp.asarray(slot, jnp.int32))
         self.stats.counters["prefills"] += 1
-        s = np.asarray(out["stats"])
+        return out
+
+    def _apply_prefill_outputs(self, nxt: np.ndarray, s: np.ndarray,
+                               slot: int, req):
+        """Host half of one admission: attribute the prefill verdict and
+        emit the first token. Returns the token when the request keeps
+        decoding, None when the prefill already finished it."""
+        rec = self.stats.record(req.id)
         self._count_event(s)
         self._attr(rec, s, prefill=True)
-        tok = np.asarray(out["next"])[0, 0]
+        tok = nxt[0, 0]
         rec.first_token_at = self._now()
-        reason = self._emit(req, tok, next_pos=plen)
+        reason = self._emit(req, tok, next_pos=req.prompt_len)
         if reason is not None:
             self._finish(slot, reason)
+            return None
+        return tok
+
+    def _prefill_into(self, slot: int, req) -> None:
+        bucket, buf = self._prep_prefill(req)
+        out = self._dispatch_prefill(slot, req, bucket, buf)
+        tok = self._apply_prefill_outputs(np.asarray(out["next"]),
+                                          np.asarray(out["stats"]),
+                                          slot, req)
+        if tok is None:
             return
         self._h_tokens[slot, 0] = tok
-        self._h_positions[slot] = plen
+        self._h_positions[slot] = req.prompt_len
+
+    def _run_audit(self) -> str:
+        """One plan-trusted weight audit through the full ladder; swaps
+        repaired/restored params in and records the verdict on every
+        active request's ledger. Returns the verdict."""
+        self.params = self.auditor.audit_or_restore(self.params)
+        verdict = self.auditor.last_verdict
+        if verdict == "repaired":
+            # graceful degradation: single-block weight corruption
+            # was solved in place mid-session; record the MTTR and
+            # keep serving without dropping a request
+            self.stats.repair_s.append(self.auditor.last_repair_s)
+            if self.mesh is not None:
+                # the repaired leaf was rebuilt on the host - put it
+                # back under the session's param shardings
+                self.params = jax.device_put(self.params, self._pshard)
+        for req in self.scheduler.active.values():
+            self.stats.record(req.id).audit_verdicts.append(verdict)
+        return verdict
 
     def step(self) -> bool:
         """One scheduler tick: audit cadence, admit+prefill, one decode
         step over all slots. Returns True while work remains."""
         if (self.plan is not None and self.audit_every
                 and self._step_count % self.audit_every == 0):
-            self.params = self.auditor.audit_or_restore(self.params)
-            verdict = self.auditor.last_verdict
-            if verdict == "repaired":
-                # graceful degradation: single-block weight corruption
-                # was solved in place mid-session; record the MTTR and
-                # keep serving without dropping a request
-                self.stats.repair_s.append(self.auditor.last_repair_s)
-                if self.mesh is not None:
-                    # the repaired leaf was rebuilt on the host - put it
-                    # back under the session's param shardings
-                    self.params = jax.device_put(self.params, self._pshard)
-            for req in self.scheduler.active.values():
-                self.stats.record(req.id).audit_verdicts.append(verdict)
+            self._run_audit()
         self._step_count += 1
         self.stats.counters["steps"] += 1
 
@@ -328,41 +366,64 @@ class ProtectedSession:
             self._prefill_into(slot, req)
 
         if self.scheduler.active:
-            with self._ctx():
-                out = self._step_fn(self.params,
-                                    jnp.asarray(self._h_tokens),
-                                    self._caches,
-                                    jnp.asarray(self._h_positions))
-            self._caches = out["caches"]
-            nxt = np.asarray(out["next"])
-            hit = np.asarray(out["hit"])
-            s = np.asarray(out["stats"])
-            self.stats.counters["decode_steps"] += 1
-            self._count_event(s)
-            detected = bool(int(s[0]))
-            attributed = False
-            for slot in self.scheduler.active_slots():
-                req = self.scheduler.active[slot]
-                if detected and hit[slot]:
-                    self._attr(self.stats.record(req.id), s)
-                    attributed = True
-                tok = nxt[slot, 0]
+            snap = self._snapshot_active()
+            out = self._dispatch_decode(jnp.asarray(self._h_tokens))
+            for slot, _, _ in snap:
                 self._h_positions[slot] += 1
-                reason = self._emit(req, tok,
-                                    next_pos=int(self._h_positions[slot]))
-                if reason is not None:
-                    self._finish(slot, reason)
-                else:
-                    self._h_tokens[slot, 0] = tok
-            if detected and not attributed:
-                # evidence with no active-slot logit movement (e.g. a
-                # fault on an inactive slot's row, or one the ladder
-                # reverted exactly) stays in the tally but is not pinned
-                # on any request
-                self.stats.counters["faults_unattributed"] += 1
-            if int(s[2]):
-                self.stats.counters["residual_steps"] += 1
+            self._apply_decode_outputs(np.asarray(out["next"]),
+                                       np.asarray(out["hit"]),
+                                       np.asarray(out["stats"]), snap)
         return self.scheduler.busy()
+
+    def _snapshot_active(self):
+        """(slot, request, position-after-this-step) for every occupied
+        slot - the launch-time view the host bookkeeping later applies
+        against (the async driver finalizes a step AFTER newer launches
+        have advanced positions and possibly re-assigned slots)."""
+        return [(slot, self.scheduler.active[slot],
+                 int(self._h_positions[slot]) + 1)
+                for slot in self.scheduler.active_slots()]
+
+    def _dispatch_decode(self, tokens):
+        """Launch one decode step over all slots (async; `tokens` may be
+        host or device-resident). Chains the donated caches."""
+        with self._ctx():
+            out = self._step_fn(self.params, tokens, self._caches,
+                                jnp.asarray(self._h_positions))
+        self._caches = out["caches"]
+        self.stats.counters["decode_steps"] += 1
+        return out
+
+    def _apply_decode_outputs(self, nxt: np.ndarray, hit: np.ndarray,
+                              s: np.ndarray, snap) -> None:
+        """Host half of one decode step: fault attribution + token
+        emission + EOS/length eviction, against the launch-time snapshot.
+        Slots whose occupant changed since launch (finished and possibly
+        re-admitted under the async driver's one-step lag) are skipped -
+        their speculative token is discarded."""
+        self._count_event(s)
+        detected = bool(int(s[0]))
+        attributed = False
+        for slot, req, pos_after in snap:
+            if self.scheduler.active.get(slot) is not req:
+                continue
+            if detected and hit[slot]:
+                self._attr(self.stats.record(req.id), s)
+                attributed = True
+            tok = nxt[slot, 0]
+            reason = self._emit(req, tok, next_pos=pos_after)
+            if reason is not None:
+                self._finish(slot, reason)
+            else:
+                self._h_tokens[slot, 0] = tok
+        if detected and not attributed:
+            # evidence with no active-slot logit movement (e.g. a
+            # fault on an inactive slot's row, or one the ladder
+            # reverted exactly) stays in the tally but is not pinned
+            # on any request
+            self.stats.counters["faults_unattributed"] += 1
+        if int(s[2]):
+            self.stats.counters["residual_steps"] += 1
 
     def run(self) -> dict:
         """Drain the queue; returns the ServingStats report dict."""

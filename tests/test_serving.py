@@ -71,6 +71,32 @@ def test_scheduler_admission_eviction_refill():
     assert len(s.dropped) == 1 and not s.busy()
 
 
+def test_scheduler_same_step_evict_then_refill():
+    """The edge the async refill path leans on hardest: a slot freed by
+    eviction (EOS or KV-capacity) must be claimable by a queued request
+    within the SAME scheduler tick, through both the FIFO admit() path
+    (sync session) and the direct place() path (async driver)."""
+    s = SlotScheduler(slots=2, max_len=32)
+    r = [s.submit(np.arange(4), 8) for _ in range(4)]
+    s.admit()
+    s.evict(0)                     # EOS eviction
+    s.evict(1)                     # KV-capacity (max_len) eviction
+    placed = s.admit()             # same tick: both freed slots refill FIFO
+    assert [(sl, q.id) for sl, q in placed] == [(0, r[2].id), (1, r[3].id)]
+    assert s.active[0] is r[2] and s.active[1] is r[3]
+
+    s2 = SlotScheduler(slots=1, max_len=32)
+    a, ok = s2.make_request(np.arange(4), 8)
+    assert ok and s2.place(a) == 0
+    b, ok = s2.make_request(np.arange(4), 8)
+    assert ok and s2.place(b) is None      # every slot occupied
+    assert s2.evict(0) is a
+    assert s2.place(b) == 0                # claimable in the same tick
+    # make_request never queues: dropped prompts are recorded, not queued
+    c, ok = s2.make_request(np.arange(64), 1)
+    assert not ok and c in s2.dropped and not s2.queue
+
+
 def test_scheduler_buckets():
     assert bucket_for(5, 64) == 8
     assert bucket_for(8, 64) == 8

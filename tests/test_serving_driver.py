@@ -1,0 +1,277 @@
+"""The async serving driver: backpressure verdicts, queued-deadline
+timeouts, graceful drain, fault attribution under concurrent admission,
+bitwise parity with the synchronous session, and mid-stream repair that
+never stalls admission."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+import repro.core as ft
+from repro.core import injection as inj
+from repro.models import transformer as M
+from repro.serving import (ProtectedSession, ServingDriver,
+                           greedy_reference)
+
+MAX_LEN = 24
+LENS = (5, 8, 6, 11, 4, 9)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return C.get("smollm-360m-smoke")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def plan(params, cfg):
+    return ft.build_plan(params, cfg, batch=4, seq=MAX_LEN)
+
+
+def _prompts(cfg, lens, seed=1):
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(lens))
+    return [np.asarray(jax.random.randint(k, (n,), 0, cfg.vocab_size))
+            for k, n in zip(keys, lens)]
+
+
+def _wait(pred, timeout=90.0, what="condition"):
+    t0 = time.monotonic()
+    while not pred():
+        if time.monotonic() - t0 > timeout:
+            raise AssertionError(f"timed out waiting for {what}")
+        time.sleep(0.01)
+
+
+# ---------------------------------------------------------------------------
+# admission-side semantics (no device work needed)
+# ---------------------------------------------------------------------------
+
+def test_driver_deadline_expires_in_queue(params, cfg, plan):
+    """A request whose TTL lapses while still queued finishes as
+    "timeout" and never occupies a slot - swept by the controller even
+    while the runner is not admitting."""
+    d = ServingDriver(params, cfg, plan, slots=1, max_len=MAX_LEN)
+    try:
+        with d.paused():               # runner quiesced: nothing admits
+            v = d.submit(_prompts(cfg, (5,))[0], max_new_tokens=2,
+                         deadline_s=0.05)
+            assert v.accepted and v.verdict == "queued"
+            _wait(lambda: d.stats.record(v.rid).finish_reason == "timeout",
+                  what="controller deadline sweep")
+        report = d.drain()
+    finally:
+        d.close()
+    rec = {r["id"]: r for r in report["requests"]}[v.rid]
+    assert rec["finish_reason"] == "timeout"
+    assert rec["slot"] is None and rec["admitted_at"] is None
+    assert report["counters"]["timeouts"] == 1
+    assert report["completed"] == 0
+
+
+def test_driver_backpressure_when_queue_full(params, cfg, plan):
+    """The bounded admission queue answers with an explicit "rejected"
+    verdict instead of growing; after drain, admission reopens."""
+    d = ServingDriver(params, cfg, plan, slots=1, max_len=MAX_LEN,
+                      queue_capacity=2)
+    p = _prompts(cfg, (5,))[0]
+    try:
+        with d.paused():
+            v1 = d.submit(p, max_new_tokens=2)
+            v2 = d.submit(p, max_new_tokens=2)
+            v3 = d.submit(p, max_new_tokens=2)
+        assert v1.accepted and v2.accepted
+        assert not v3.accepted
+        assert v3.verdict == "rejected" and v3.reason == "queue_full"
+        report = d.drain()
+        assert report["completed"] == 2
+        assert report["counters"]["rejected"] == 1
+        assert report["counters"]["dropped"] == 0
+        # a drained driver keeps serving (compiled programs stay warm)
+        v4 = d.submit(p, max_new_tokens=2)
+        assert v4.accepted
+        report = d.drain()
+        assert report["completed"] == 3
+    finally:
+        d.close()
+    rec = {r["id"]: r for r in report["requests"]}[v3.rid]
+    assert rec["finish_reason"] == "rejected" and rec["slot"] is None
+
+
+def test_driver_oversized_prompt_dropped(params, cfg, plan):
+    d = ServingDriver(params, cfg, plan, slots=1, max_len=MAX_LEN)
+    try:
+        v = d.submit(np.arange(MAX_LEN), max_new_tokens=1)
+        assert not v.accepted and v.verdict == "dropped"
+        report = d.drain()
+    finally:
+        d.close()
+    assert report["counters"]["dropped"] == 1
+
+
+def test_driver_step_surface_disabled(params, cfg, plan):
+    d = ServingDriver(params, cfg, plan, slots=1, max_len=MAX_LEN)
+    try:
+        with pytest.raises(RuntimeError, match="asynchronous"):
+            d.step()
+        with pytest.raises(RuntimeError, match="asynchronous"):
+            d.run()
+    finally:
+        d.close()
+
+
+# ---------------------------------------------------------------------------
+# drain + parity with the synchronous session
+# ---------------------------------------------------------------------------
+
+def test_driver_drain_finishes_all_with_parity(params, cfg, plan):
+    """Graceful drain: more requests than slots, drain serves every one
+    (zero drops, zero timeouts), and each request's token stream is
+    bitwise the synchronous session's AND the unbatched unprotected
+    reference. Queue-delay fields are populated for refill-admitted
+    requests."""
+    gen = 4
+    prompts = _prompts(cfg, LENS)
+    d = ServingDriver(params, cfg, plan, slots=2, max_len=MAX_LEN)
+    try:
+        verdicts = [d.submit(p, max_new_tokens=gen) for p in prompts]
+        assert all(v.accepted for v in verdicts)
+        report = d.drain()
+    finally:
+        d.close()
+
+    assert report["completed"] == len(prompts)
+    for key in ("dropped", "timeouts", "rejected", "faults_detected"):
+        assert report["counters"][key] == 0, (key, report["counters"])
+
+    sess = ProtectedSession(params, cfg, plan, slots=2, max_len=MAX_LEN)
+    rids = [sess.submit(p, max_new_tokens=gen) for p in prompts]
+    sess.run()
+
+    ucfg = cfg.replace(abft=False)
+    for v, rid, p in zip(verdicts, rids, prompts):
+        want = greedy_reference(params, ucfg, p, gen, MAX_LEN)
+        assert d.tokens_for(v.rid) == want, f"driver {v.rid} diverged"
+        assert sess.tokens_for(rid) == want
+
+    recs = {r["id"]: r for r in report["requests"]}
+    for v in verdicts:
+        r = recs[v.rid]
+        assert r["finish_reason"] == "length"
+        assert r["queue_delay_s"] is not None and r["queue_delay_s"] >= 0
+        assert r["ttft_s"] is not None
+    assert report["queue_delay_p50_s"] is not None
+    assert report["ttft_p99_s"] is not None
+
+
+# ---------------------------------------------------------------------------
+# fault attribution under concurrent admission
+# ---------------------------------------------------------------------------
+
+def test_driver_fault_attributes_to_correct_slot(params, cfg, plan):
+    """A decode fault pinned to one slot's logits row, injected while the
+    driver is admitting/refilling concurrently, still lands on exactly
+    the requests that occupied that slot - and correction keeps every
+    stream bitwise clean."""
+    slots, target, gen = 2, 1, 4
+    head = "embed/table" if cfg.tie_embeddings else "embed/head"
+
+    def hook(o):
+        if o.ndim == 3 and o.shape[0] == slots and o.shape[1] == 1:
+            return o.at[target, 0, 3].add(np.float32(1e4))
+        return o
+
+    prompts = _prompts(cfg, (5, 8, 6, 11))
+    d = ServingDriver(params, cfg, plan, slots=slots, max_len=MAX_LEN)
+    try:
+        # trace-time injection: the scope must cover the runner's first
+        # decode compile AND the whole serve (the fault is baked into
+        # the jitted program, firing on every step)
+        with inj.fault_scope(head, hook):
+            verdicts = [d.submit(p, max_new_tokens=gen) for p in prompts]
+            report = d.drain()
+    finally:
+        d.close()
+
+    assert report["completed"] == len(prompts)
+    recs = {r["id"]: r for r in report["requests"]}
+    hit = [recs[v.rid] for v in verdicts if recs[v.rid]["slot"] == target]
+    clean = [recs[v.rid] for v in verdicts
+             if recs[v.rid]["slot"] == 1 - target]
+    assert hit and clean
+    for r in hit:
+        assert r["faults_detected"] >= 1, r
+        assert r["corrections_applied"] >= 1, r
+        assert r["residuals"] == 0
+    for r in clean:
+        assert r["faults_detected"] == 0, r
+    ucfg = cfg.replace(abft=False)
+    for v, p in zip(verdicts, prompts):
+        assert d.tokens_for(v.rid) == greedy_reference(
+            params, ucfg, p, gen, MAX_LEN), f"request {v.rid} diverged"
+
+
+# ---------------------------------------------------------------------------
+# mid-stream weight repair without stalling admission
+# ---------------------------------------------------------------------------
+
+def test_driver_mid_stream_repair_keeps_serving(params, cfg, plan):
+    """A weight element flips while a request is mid-stream. The
+    controller-side audit solves the block in place before the next
+    decode launch; admission keeps answering throughout (a submit issued
+    during the repair window is served, not timed out), and the stream
+    stays bitwise the clean reference."""
+    gen = 6
+    p = _prompts(cfg, (5,))[0]
+    name = next(n for n, e in plan.entries.items()
+                if n.startswith("stages/") and e.wlc is not None)
+
+    def corrupt(ps):
+        bad = jax.tree.map(lambda x: x, ps)
+        parts = name.split("/")
+        parent = bad
+        for part in parts[:-1]:
+            parent = parent[part]
+        leaf = parent[parts[-1]]
+        w = leaf["w"] if isinstance(leaf, dict) else leaf
+        w = w.at[(0,) * w.ndim].add(np.float32(977.0))
+        if isinstance(leaf, dict):
+            leaf["w"] = w
+        else:
+            parent[parts[-1]] = w
+        return bad
+
+    d = ServingDriver(params, cfg, plan, slots=2, max_len=MAX_LEN,
+                      audit_every=1)
+    try:
+        v0 = d.submit(p, max_new_tokens=gen)
+        _wait(lambda: d.tokens_generated(v0.rid) >= 2,
+              what="mid-stream progress")
+        with d.paused():
+            d.params = corrupt(d.params)
+            # admission stays open while corrupted weights await repair
+            v1 = d.submit(_prompts(cfg, (8,))[0], max_new_tokens=2)
+            assert v1.accepted
+        report = d.drain()
+    finally:
+        d.close()
+
+    assert report["counters"]["weight_repairs"] == 1
+    assert report["counters"]["weight_restores"] == 0
+    assert report["counters"]["timeouts"] == 0
+    assert report["completed"] == 2
+    assert report["mttr_repair_s"] is not None and report["mttr_repair_s"] > 0
+    rec = {r["id"]: r for r in report["requests"]}[v0.rid]
+    assert "repaired" in rec["audit_verdicts"]
+    assert rec["finish_reason"] == "length"
+    np.testing.assert_array_equal(
+        np.asarray(ft.weight_leaf(d.params, name)),
+        np.asarray(ft.weight_leaf(params, name)))
+    ucfg = cfg.replace(abft=False)
+    assert d.tokens_for(v0.rid) == greedy_reference(params, ucfg, p, gen,
+                                                    MAX_LEN)
